@@ -1,0 +1,103 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.report > artifacts/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS
+from repro.configs.shapes import SHAPES
+
+from benchmarks.roofline import MESHES, cell_row, suggestion
+
+
+def load_artifacts(artifacts_dir="artifacts/dryrun"):
+    recs = {}
+    for path in glob.glob(os.path.join(artifacts_dir, "*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        recs[rec["cell"]] = rec
+    return recs
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | status | mem/dev | fits 16GB | compile | collectives (schedule) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("pod1", "pod2"):
+                cell = f"{arch}__{shape}__{mesh}"
+                r = recs.get(cell)
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                if r["status"] == "skip":
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | skip | — | — | — | {r['reason']} |"
+                    )
+                    continue
+                m = r["memory"]
+                coll = r["collectives_schedule_bytes"]
+                kinds = ", ".join(
+                    f"{k.split('-')[0]}-{k.split('-')[1][:1]}:{v/2**20:.0f}MiB"
+                    for k, v in sorted(coll.items())
+                    if k != "num_collectives"
+                )
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | "
+                    f"{m['per_device_total']/2**30:.2f} GiB | "
+                    f"{'✅' if m['fits_16gb'] else '❌'} | "
+                    f"{r['compile_seconds']:.0f}s | n={coll['num_collectives']} {kinds} |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table(mesh_name="pod1"):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | roofline frac | 6·N·D/analytic | next move |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = cell_row(arch, shape, mesh_name)
+            if r["status"] != "ok":
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | skip | — | — | {r['reason']} |"
+                )
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | {r['dominant']} "
+                f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} "
+                f"| {suggestion(r)} |"
+            )
+    return "\n".join(lines)
+
+
+def summarize(recs):
+    ok = [r for r in recs.values() if r["status"] == "ok"]
+    skip = [r for r in recs.values() if r["status"] == "skip"]
+    fail = [r for r in recs.values() if r["status"] == "fail"]
+    fits = [r for r in ok if r["memory"]["fits_16gb"]]
+    return (
+        f"cells: {len(recs)} (ok={len(ok)}, applicability-skip={len(skip)}, "
+        f"fail={len(fail)}); fits-16GiB: {len(fits)}/{len(ok)}"
+    )
+
+
+def main():
+    recs = load_artifacts()
+    print("## §Dry-run ledger\n")
+    print(summarize(recs) + "\n")
+    print(dryrun_table(recs))
+    print("\n## §Roofline (single-pod 16×16, analytic model)\n")
+    print(roofline_table("pod1"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness — one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks problem sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--only", default=None,
+        choices=["convergence", "speedup", "kernels", "roofline"],
+    )
+    args = ap.parse_args()
+
+    from benchmarks import convergence, kernels, roofline, speedup
+
+    sections = {
+        "convergence": lambda: convergence.run(quick=args.quick)[0],
+        "speedup": lambda: speedup.run(quick=args.quick),
+        "kernels": lambda: kernels.run(quick=args.quick),
+        "roofline": lambda: roofline.run(quick=args.quick),
+    }
+    if args.only:
+        sections = {args.only: sections[args.only]}
+
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        except Exception as e:  # keep the harness running; report the failure
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            import traceback
+
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper §5 worked example + Fig 2 comparison at (18252×4563)-like scale
+(scaled to CPU budget; pass --full for the paper's exact shape).
+
+    PYTHONPATH=src python examples/solve_sparse.py [--full]
+"""
+import argparse
+import numpy as np
+
+from repro.core import solve
+from repro.sparse import make_problem, matrix_stats
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true",
+                help="paper's exact 18252x4563 shape (slow on CPU)")
+args = ap.parse_args()
+
+n, m = (4563, 18252) if args.full else (1141, 4564)
+# paper §5: mu=0.013, sigma=24.31, sparsity 99.85%
+prob = make_problem(n=n, m=m, sparsity=0.9985, seed=42, dtype=np.float32)
+print("core matrix stats:", matrix_stats(prob.coo))
+
+results = {}
+for method in ("apc", "dapc", "dgd"):
+    res = solve(prob.A, prob.b, method=method, num_blocks=4, num_epochs=95,
+                gamma=1.0, eta=0.9, x_ref=prob.x_true)
+    results[method] = res
+    mse = np.asarray(res.history["mse"])
+    print(f"{method:5s} wall={res.wall_seconds:6.2f}s "
+          f"init={float(res.history['initial']['mse']):.3e} "
+          f"final={mse[-1]:.3e}")
+
+acc = results["apc"].wall_seconds / results["dapc"].wall_seconds
+print(f"\nacceleration (classical/decomposed): {acc:.2f}x "
+      f"(paper Table 1 reports 1.24-1.79x at matching shapes)")
+x = results["dapc"].x
+print(f"solution vector: mean={x.mean():.4f} std={x.std():.4f} "
+      f"(paper §5: mu~-0.0027 sigma~0.0763 for its dataset)")

@@ -1,0 +1,27 @@
+"""The paper's primary contribution: (Decomposed) Accelerated
+Projection-Based Consensus solvers + the DGD baseline."""
+from repro.core.partition import Partition, partition_system, resolve_mode
+from repro.core.solver_api import SolveResult, solve
+from repro.core.apc import solve_apc, setup_classical
+from repro.core.dapc import solve_dapc, setup_decomposed, make_apply
+from repro.core.dgd import solve_dgd
+from repro.core.cg import solve_cgnr
+from repro.core.consensus import run_consensus, tune_hyperparams, block_residual_sq
+
+__all__ = [
+    "Partition",
+    "partition_system",
+    "resolve_mode",
+    "SolveResult",
+    "solve",
+    "solve_apc",
+    "setup_classical",
+    "solve_dapc",
+    "setup_decomposed",
+    "make_apply",
+    "solve_dgd",
+    "solve_cgnr",
+    "run_consensus",
+    "tune_hyperparams",
+    "block_residual_sq",
+]

@@ -1,0 +1,65 @@
+"""CGNR baseline: conjugate gradient on the normal equations AᵀA x = Aᵀb.
+
+The paper compares APC only against DGD; CG-type Krylov methods are the
+standard distributed alternative for consistent least-squares systems, so the
+benchmark suite includes one. Distribution profile per iteration: each worker
+computes A_jᵀ(A_j p) on its row block (two tall matvecs, no setup phase at
+all) followed by one n-vector all-reduce — same collective shape as APC's
+consensus average, but no QR/inverse setup. The trade: APC-family methods
+amortize an expensive setup into cheap iterations; CGNR has zero setup but
+squares the condition number (κ(AᵀA) = κ(A)²), so it needs far more epochs
+on ill-conditioned systems (measured in benchmarks/convergence).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import Partition
+
+
+def solve_cgnr(
+    part: Partition,
+    num_epochs: int = 100,
+    x_ref: jnp.ndarray | None = None,
+    tol: float = 0.0,
+):
+    """CGNR end-to-end. Returns (x, history dict matching APC's)."""
+    blocks, bvecs = part.blocks, part.bvecs
+    n = blocks.shape[-1]
+
+    def matvec_normal(v):
+        # Σ_j A_jᵀ (A_j v) — block-local compute + (would-be) psum
+        av = jnp.einsum("jpn,n->jp", blocks, v)
+        return jnp.einsum("jpn,jp->n", blocks, av)
+
+    atb = jnp.einsum("jpn,jp->n", blocks, bvecs)
+
+    def metrics(x):
+        out = {}
+        if x_ref is not None:
+            d = x - x_ref
+            out["mse"] = jnp.mean(d * d)
+        r = jnp.einsum("jpn,n->jp", blocks, x) - bvecs
+        out["residual_sq"] = jnp.sum(r * r)
+        return out
+
+    x0 = jnp.zeros((n,), blocks.dtype)
+    r0 = atb - matvec_normal(x0)
+
+    def step(carry, _):
+        x, r, p, rs = carry
+        ap = matvec_normal(p)
+        alpha = rs / jnp.maximum(jnp.vdot(p, ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.vdot(r, r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta * p
+        return (x, r, p, rs_new), metrics(x)
+
+    (x, _, _, _), hist = jax.lax.scan(
+        step, (x0, r0, r0, jnp.vdot(r0, r0)), None, length=num_epochs
+    )
+    hist["initial"] = metrics(x0)
+    return x, hist

@@ -1,0 +1,108 @@
+"""The APC consensus iteration (paper eqs. 6–7) as a jitted ``lax.scan``.
+
+Shared by classical APC and decomposed APC — the two differ only in how the
+per-block initial solutions and projectors are produced (Algorithm 1 steps
+2–3), not in the iteration itself (steps 5–8).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def block_residual_sq(blocks: jnp.ndarray, bvecs: jnp.ndarray, x: jnp.ndarray):
+    """Global residual ||A x − b||² computed block-wise (no A reassembly)."""
+    r = jnp.einsum("jpn,n->jp", blocks, x) - bvecs
+    return jnp.sum(r * r)
+
+
+def run_consensus(
+    x0s: jnp.ndarray,  # (J, n) per-block initial solutions
+    apply_fn: Callable[[jnp.ndarray], jnp.ndarray],  # (J, n) -> (J, n): P_j v_j
+    gamma: float,
+    eta: float,
+    num_epochs: int,
+    x_ref: jnp.ndarray | None = None,
+    blocks: jnp.ndarray | None = None,
+    bvecs: jnp.ndarray | None = None,
+    avg_every: int = 1,
+    compress: str | None = None,  # None | "bf16_delta"
+    xbar0: jnp.ndarray | None = None,  # warm start (elastic restart)
+):
+    """Paper eqs. (5)–(7). Returns (x̄_final, history dict).
+
+    history carries per-epoch MSE to ``x_ref`` (paper Fig. 2 metric) and the
+    global residual when (blocks, bvecs) are supplied.
+
+    ``compress="bf16_delta"`` halves the consensus all-reduce payload by
+    communicating the DELTA mean(x)−x̄ in bf16 (eq. 7 rewritten as
+    x̄ += η·Δ). The quantization error is relative to the shrinking delta,
+    so the trajectory matches f32 to the final MSE (validated in
+    tests/test_core_solvers.py; EXPERIMENTS.md §Perf solver iteration 3) —
+    unlike quantizing x̄ itself, which floors at bf16 ULP.
+
+    ``avg_every > 1`` is a beyond-paper collective optimization: the
+    consensus average (the only cross-worker collective) runs every k-th
+    epoch; between averages workers take local projection steps against the
+    stale x̄. Cuts the all-reduce count by k× — at 512+ chips the per-epoch
+    n-vector psum is the latency floor of the whole algorithm
+    (EXPERIMENTS.md §Perf, solver)."""
+    if xbar0 is None:
+        xbar0 = jnp.mean(x0s, axis=0)  # eq. (5)
+
+    def metrics(xbar):
+        out = {}
+        if x_ref is not None:
+            d = xbar - x_ref
+            out["mse"] = jnp.mean(d * d)
+        if blocks is not None and bvecs is not None:
+            out["residual_sq"] = block_residual_sq(blocks, bvecs, xbar)
+        return out
+
+    def step(carry, t):
+        xs, xbar = carry
+        xs = xs + gamma * apply_fn(xbar[None, :] - xs)  # eq. (6), parallel in j
+        do_avg = (t + 1) % avg_every == 0
+        if compress == "bf16_delta":
+            delta = jnp.mean(xs - xbar[None, :], axis=0)  # the wire payload
+            delta = delta.astype(jnp.bfloat16).astype(xbar.dtype)
+            xbar_new = xbar + eta * delta  # eq. (7), delta form
+        else:
+            xbar_new = eta * jnp.mean(xs, axis=0) + (1.0 - eta) * xbar  # eq. (7)
+        xbar = jnp.where(do_avg, xbar_new, xbar)
+        return (xs, xbar), metrics(xbar)
+
+    (xs, xbar), hist = jax.lax.scan(
+        step, (x0s, xbar0), jnp.arange(num_epochs)
+    )
+    hist["initial"] = metrics(xbar0)
+    return xbar, hist
+
+
+def tune_hyperparams(
+    x0s: jnp.ndarray,
+    apply_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    blocks: jnp.ndarray,
+    bvecs: jnp.ndarray,
+    gammas: jnp.ndarray,
+    etas: jnp.ndarray,
+    probe_epochs: int = 20,
+) -> tuple[float, float]:
+    """Grid-search (γ, η) by residual after a short probe run (vmapped).
+
+    The paper chooses these "heuristically"; this makes the heuristic
+    reproducible. Cheap: probe runs are vmapped into one compiled program.
+    """
+    gg, ee = jnp.meshgrid(gammas, etas, indexing="ij")
+    pairs = jnp.stack([gg.ravel(), ee.ravel()], axis=1)
+
+    def probe(pair):
+        xbar, _ = run_consensus(x0s, apply_fn, pair[0], pair[1], probe_epochs)
+        return block_residual_sq(blocks, bvecs, xbar)
+
+    scores = jax.vmap(probe)(pairs)
+    scores = jnp.where(jnp.isfinite(scores), scores, jnp.inf)
+    best = pairs[jnp.argmin(scores)]
+    return float(best[0]), float(best[1])

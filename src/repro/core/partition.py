@@ -1,0 +1,75 @@
+"""Row-partitioning of the global system into per-worker blocks.
+
+The paper's Algorithm 1 step 1: "Decompress J submatrices from A and J
+subvectors from b on worker nodes". For SPMD we use uniform block sizes
+(remainder rows re-mixed into consistent padding equations — see
+``repro.sparse.matrix.block_rows``); the block index ``j`` maps onto the
+(``pod``, ``data``) mesh axes in the distributed solver.
+
+``block_mode`` semantics (DESIGN.md §1.1):
+  * ``"tall"`` — blocks with p >= n rows (the paper's stated regime).
+  * ``"wide"`` — blocks with p < n rows (classical-APC regime; non-degenerate
+    consensus). Chosen automatically from (m, n, J) when mode="auto".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+BlockMode = Literal["tall", "wide", "auto"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Uniform row partition of a dense (or densified) system."""
+
+    blocks: jnp.ndarray  # (J, p, n)
+    bvecs: jnp.ndarray  # (J, p)
+    mode: str  # "tall" | "wide"
+
+    @property
+    def num_blocks(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def block_rows(self) -> int:
+        return self.blocks.shape[1]
+
+    @property
+    def num_cols(self) -> int:
+        return self.blocks.shape[2]
+
+
+def resolve_mode(m: int, n: int, num_blocks: int, mode: BlockMode) -> str:
+    if mode == "auto":
+        return "tall" if -(-m // num_blocks) >= n else "wide"
+    p = -(-m // num_blocks)
+    if mode == "tall" and p < n:
+        raise ValueError(
+            f"tall mode needs m/J >= n (paper: (m+n)/J >= n); got p={p} < n={n}"
+        )
+    if mode == "wide" and p >= n:
+        raise ValueError(f"wide mode needs m/J < n; got p={p} >= n={n}")
+    return mode
+
+
+def partition_system(
+    A: np.ndarray,
+    b: np.ndarray,
+    num_blocks: int,
+    mode: BlockMode = "auto",
+    dtype=None,
+) -> Partition:
+    """Split (A, b) into J uniform dense row blocks ready for device transfer."""
+    from repro.sparse.matrix import block_rows as _block_rows
+
+    m, n = A.shape
+    resolved = resolve_mode(m, n, num_blocks, mode)
+    blocks, bvecs = _block_rows(np.asarray(A), np.asarray(b), num_blocks)
+    if dtype is not None:
+        blocks = blocks.astype(dtype)
+        bvecs = bvecs.astype(dtype)
+    return Partition(jnp.asarray(blocks), jnp.asarray(bvecs), resolved)

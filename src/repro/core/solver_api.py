@@ -1,0 +1,90 @@
+"""Unified public solver API: ``solve(A, b, method=...)``.
+
+This is the framework entry point for the paper's technique — examples, the
+linear-probe integration, and the benchmarks all go through here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apc, cg, dapc, dgd
+from repro.core.partition import BlockMode, partition_system
+
+METHODS = ("apc", "dapc", "dgd", "cgnr")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    x: np.ndarray
+    method: str
+    mode: str
+    num_blocks: int
+    num_epochs: int
+    history: dict[str, Any]  # per-epoch metrics (mse / residual_sq)
+    wall_seconds: float
+    gamma: float | None = None
+    eta: float | None = None
+
+    @property
+    def final_mse(self) -> float | None:
+        h = self.history.get("mse")
+        return float(h[-1]) if h is not None else None
+
+    @property
+    def final_residual(self) -> float:
+        return float(self.history["residual_sq"][-1])
+
+
+def solve(
+    A: np.ndarray,
+    b: np.ndarray,
+    method: str = "dapc",
+    num_blocks: int = 8,
+    num_epochs: int = 100,
+    gamma: float = 1.0,
+    eta: float = 0.9,
+    mode: BlockMode = "auto",
+    x_ref: np.ndarray | None = None,
+    dtype=None,
+    **kwargs,
+) -> SolveResult:
+    """Solve the (consistent, overdetermined) system A x = b distributively.
+
+    kwargs are forwarded to the method (e.g. ``materialize_p=False`` /
+    ``use_kernels=True`` for dapc, ``lr=`` for dgd).
+    """
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}")
+    part = partition_system(A, b, num_blocks, mode=mode, dtype=dtype)
+    ref = None if x_ref is None else jnp.asarray(x_ref, part.blocks.dtype)
+
+    t0 = time.perf_counter()
+    if method == "apc":
+        x, hist = apc.solve_apc(part, gamma, eta, num_epochs, x_ref=ref)
+    elif method == "dapc":
+        x, hist = dapc.solve_dapc(part, gamma, eta, num_epochs, x_ref=ref, **kwargs)
+    elif method == "cgnr":
+        x, hist = cg.solve_cgnr(part, num_epochs=num_epochs, x_ref=ref, **kwargs)
+    else:
+        x, hist = dgd.solve_dgd(part, num_epochs=num_epochs, x_ref=ref, **kwargs)
+    x = jax.block_until_ready(x)
+    wall = time.perf_counter() - t0
+
+    hist = jax.tree.map(np.asarray, hist)
+    return SolveResult(
+        x=np.asarray(x),
+        method=method,
+        mode=part.mode,
+        num_blocks=num_blocks,
+        num_epochs=num_epochs,
+        history=hist,
+        wall_seconds=wall,
+        gamma=gamma if method in ("apc", "dapc") else None,
+        eta=eta if method in ("apc", "dapc") else None,
+    )

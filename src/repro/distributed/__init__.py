@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    ParamSpec,
+    SHARDING_RULES,
+    logical_to_spec,
+    tree_pspecs,
+    init_from_specs,
+    shape_structs,
+)

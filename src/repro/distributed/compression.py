@@ -1,0 +1,55 @@
+"""Gradient compression for the DP all-reduce: int8 quantization with error
+feedback (DESIGN.md §7).
+
+At 1000+ nodes the gradient all-reduce dominates the step at small per-chip
+batch; 4× compression (f32→int8) cuts the collective term proportionally.
+Error feedback keeps the quantization bias out of the long-run trajectory
+(the residual is re-added next step), preserving convergence — validated in
+tests/test_training.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residuals):
+    """Apply error feedback + quantize each leaf.
+
+    Returns (quantized tree of (q, scale), new residuals)."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, s = quantize_int8(g)
+        deq = dequantize_int8(q, s)
+        return (q, s), g - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qtree = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_res = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return qtree, new_res
+
+
+def decompress_tree(qtree):
+    return jax.tree.map(
+        lambda qs: dequantize_int8(*qs),
+        qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

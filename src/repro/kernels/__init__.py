@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper optimizes exactly two per-worker operations (Algorithm 1):
+  * the triangular-substitution initial solve (eqs. 2-3) -- ``trisolve/``
+  * the projection application in the consensus update (eqs. 4, 6)
+    -- ``project/`` (fused ``x + gamma*(I - W^T W)(xbar - x)``, never
+    materializing P)
+
+Each kernel ships ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd padded wrapper, interpret=True on CPU) and ``ref.py`` (pure-jnp
+oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,82 @@
+"""Jit'd public wrappers around the fused consensus-update kernel.
+
+Handles lane/sublane padding (p → ×8, n → ×TILE_N; zero rows of W contribute
+nothing to Wᵀ(Wv), zero-padded vector lanes are sliced off), batching over the
+block index J, and interpret-mode selection on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.project import project as _kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _consensus_update(w, x, xbar, gamma, tile_n, interpret):
+    p, n = w.shape
+    p_pad = _round_up(max(p, 8), 8)
+    n_pad = _round_up(n, tile_n)
+    w_p = jnp.pad(w, ((0, p_pad - p), (0, n_pad - n)))
+    x_p = jnp.pad(x, (0, n_pad - n))[:, None]
+    xb_p = jnp.pad(xbar, (0, n_pad - n))[:, None]
+    out = _kernel.consensus_update_padded(
+        w_p, x_p, xb_p, float(gamma), tile_n=tile_n, interpret=interpret
+    )
+    return out[:n, 0]
+
+
+def _cu_fwd(w, x, xbar, gamma, tile_n, interpret):
+    return _consensus_update(w, x, xbar, gamma, tile_n, interpret), (w, x, xbar)
+
+
+def _cu_bwd(gamma, tile_n, interpret, res, g):
+    w, x, xbar = res
+    v = xbar - x
+    Pg = g - w.T @ (w @ g)  # P is symmetric: vjp of Pv wrt v is Pg
+    u = w @ v
+    # d(Wᵀ(Wv))/dW contribution: u gᵀ + (W g) vᵀ  (see kernel docstring math)
+    dw = (-gamma) * (jnp.outer(u, g) + jnp.outer(w @ g, v))
+    dx = g - gamma * Pg
+    dxbar = gamma * Pg
+    return dw.astype(w.dtype), dx.astype(x.dtype), dxbar.astype(xbar.dtype)
+
+
+_consensus_update.defvjp(_cu_fwd, _cu_bwd)
+
+
+def consensus_update(
+    w: jnp.ndarray,  # (p, n)
+    x: jnp.ndarray,  # (n,)
+    xbar: jnp.ndarray,  # (n,)
+    gamma: float = 1.0,
+    tile_n: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """x + γ(I − WᵀW)(x̄ − x) — fused, P never materialized.
+
+    Differentiable: forward runs the Pallas kernel; backward uses the closed
+    implicit-projection formulas (P is symmetric idempotent), so the dense P
+    is never built in either direction.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n = w.shape[1]
+    if tile_n is None:
+        tile_n = min(_kernel.DEFAULT_TILE_N, _round_up(n, 128))
+    return _consensus_update(w, x, xbar, float(gamma), tile_n, bool(interpret))
+
+
+def project(w: jnp.ndarray, v: jnp.ndarray, **kw) -> jnp.ndarray:
+    """(I − WᵀW) v via the fused kernel (x = 0, γ = 1)."""
+    return consensus_update(w, jnp.zeros_like(v), v, 1.0, **kw)

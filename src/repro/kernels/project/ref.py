@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused consensus update — materializes the dense
+projector exactly like the paper's reference implementation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def consensus_update_ref(
+    w: jnp.ndarray, x: jnp.ndarray, xbar: jnp.ndarray, gamma: float
+) -> jnp.ndarray:
+    """x + γ (I − WᵀW)(x̄ − x) with explicit P (O(n²) memory)."""
+    n = w.shape[-1]
+    P = jnp.eye(n, dtype=jnp.float32) - w.astype(jnp.float32).T @ w.astype(
+        jnp.float32
+    )
+    v = xbar.astype(jnp.float32) - x.astype(jnp.float32)
+    return (x.astype(jnp.float32) + gamma * (P @ v)).astype(x.dtype)
+
+
+def project_ref(w: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """(I − WᵀW) v with explicit P."""
+    return consensus_update_ref(w, jnp.zeros_like(v), v, 1.0)

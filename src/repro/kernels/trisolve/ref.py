@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the blocked triangular solve."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+
+def trisolve_ref(r: jnp.ndarray, y: jnp.ndarray, lower: bool = False) -> jnp.ndarray:
+    return solve_triangular(r, y, lower=lower)

@@ -1,0 +1,99 @@
+"""Blocked triangular-substitution Pallas kernel (paper eqs. 2–3).
+
+Solves ``R x = y`` for upper-triangular ``R`` (back-substitution) or
+lower-triangular (forward), the O(n²) substitution the paper uses instead of
+O(n³) Gauss–Jordan inversion.
+
+TPU adaptation (DESIGN.md §2): plain scalar substitution is
+VPU-serial and hostile to the MXU, so we re-block it:
+
+  * grid over ``B×B`` diagonal blocks, iterated in solve order (reverse for
+    upper) via the BlockSpec index_map — Pallas TPU grids execute
+    sequentially on a core, so a VMEM scratch carries the partial solution
+    across steps;
+  * the off-diagonal update ``Σ_{k>i} R[i,k] x[k]`` is one (B × n)·(n × 1)
+    MXU matmul against the zero-initialized scratch (uncomputed entries are
+    exactly 0, so no masking is needed);
+  * the B×B diagonal solve uses log₂B Neumann doublings:
+    ``R_d = D(I − M)`` with M strictly triangular (nilpotent, Mᴮ = 0) ⇒
+    ``R_d⁻¹ = (Σ_{k<B} Mᵏ) D⁻¹``, and ``Σ Mᵏ`` builds in log₂B squarings —
+    7 MXU matmuls for B = 128 instead of B scalar steps.
+
+VMEM per step: the full row block (B × n) — 128·n·4 B; n ≤ 16k fits < 8 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _neumann_tri_solve(rdd: jnp.ndarray, rhs: jnp.ndarray, lower: bool):
+    """Solve the B×B triangular diagonal block via log-doubling (all MXU)."""
+    b = rdd.shape[0]
+    acc = rdd.dtype
+    diag = jnp.diagonal(rdd)
+    dinv = 1.0 / diag
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    strict = cols > rows if not lower else cols < rows
+    # M = I − D⁻¹R restricted to the strict triangle (nilpotent)
+    m = jnp.where(strict, -dinv[:, None] * rdd, 0.0)
+    s = jnp.eye(b, dtype=acc)
+    p = m
+    for _ in range(max(1, (b - 1).bit_length())):  # ⌈log₂B⌉ doublings
+        s = s + jnp.dot(p, s, preferred_element_type=acc)
+        p = jnp.dot(p, p, preferred_element_type=acc)
+    return jnp.dot(s, dinv[:, None] * rhs, preferred_element_type=acc)
+
+
+def _trisolve_kernel(lower, nb, block, r_ref, y_ref, x_ref, xs_ref):
+    """Grid (nb,). r_ref: (B, n) row block in solve order; xs_ref (n,1) acc."""
+    g = pl.program_id(0)
+    i = g if lower else nb - 1 - g  # solve order → block-row index
+
+    @pl.when(g == 0)
+    def _init():
+        xs_ref[...] = jnp.zeros_like(xs_ref)
+
+    acc_dtype = xs_ref.dtype  # f32, or f64 when x64 is enabled
+    row = r_ref[...].astype(acc_dtype)
+    acc = jnp.dot(row, xs_ref[...], preferred_element_type=acc_dtype)
+    rhs = y_ref[...].astype(acc_dtype) - acc
+    start = jnp.asarray(i * block, jnp.int32)
+    rdd = jax.lax.dynamic_slice(row, (jnp.int32(0), start), (block, block))
+    xi = _neumann_tri_solve(rdd, rhs, lower)
+    xs_ref[pl.dslice(i * block, block), :] = xi
+    x_ref[...] = xi.astype(x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lower", "block", "interpret"))
+def trisolve_padded(
+    r: jnp.ndarray,  # (n_pad, n_pad), n_pad % block == 0, unit-extended diag
+    y: jnp.ndarray,  # (n_pad, 1)
+    lower: bool = False,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n_pad = r.shape[0]
+    if n_pad % block:
+        raise ValueError(f"padded size required: {n_pad} % {block}")
+    nb = n_pad // block
+    order = (lambda g: (g, 0)) if lower else (lambda g: (nb - 1 - g, 0))
+    return pl.pallas_call(
+        functools.partial(_trisolve_kernel, lower, nb, block),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block, n_pad), order),  # full row block, solve order
+            pl.BlockSpec((block, 1), order),
+        ],
+        out_specs=pl.BlockSpec((block, 1), order),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), y.dtype),
+        scratch_shapes=[pltpu.VMEM((n_pad, 1), jnp.promote_types(r.dtype, jnp.float32))],
+        interpret=interpret,
+    )(r, y)

@@ -1,0 +1,66 @@
+"""Multi-host initialization for real TPU pods.
+
+On a real v5e pod slice every host runs the same program; JAX discovers the
+topology from the TPU runtime. On GPU/CPU clusters, pass the coordinator
+explicitly (or set the standard env vars: COORDINATOR_ADDRESS, NUM_PROCESSES,
+PROCESS_ID).
+
+Usage on a 2-pod (512-chip) deployment — each host executes:
+
+    python -m repro.launch.train --arch granite-3-8b ... \
+        # after repro.launch.multihost.initialize() at program start
+
+The dry-run (launch/dryrun.py) intentionally does NOT use this module: it
+fakes 512 devices on one host to validate sharding without hardware.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def initialize(coordinator: str | None = None,
+               num_processes: int | None = None,
+               process_id: int | None = None) -> dict:
+    """Initialize jax.distributed for multi-host execution. Safe no-op when
+    running single-process (tests, CPU container)."""
+    coordinator = coordinator or os.environ.get("COORDINATOR_ADDRESS")
+    num_processes = num_processes or _int_env("NUM_PROCESSES")
+    process_id = process_id if process_id is not None else _int_env("PROCESS_ID")
+    if coordinator is None and num_processes is None:
+        # TPU pod runtime auto-discovers; single host otherwise
+        try:
+            jax.distributed.initialize()
+        except Exception:
+            pass  # single-process fallback (CPU container, unit tests)
+    else:
+        jax.distributed.initialize(
+            coordinator_address=coordinator,
+            num_processes=num_processes,
+            process_id=process_id,
+        )
+    return {
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": jax.local_device_count(),
+        "global_devices": jax.device_count(),
+    }
+
+
+def _int_env(name: str) -> int | None:
+    v = os.environ.get(name)
+    return int(v) if v is not None else None
+
+
+def assert_production_topology(multi_pod: bool = False) -> None:
+    """Guard for launch scripts: the global device count must match the
+    production mesh (16×16 per pod)."""
+    want = 512 if multi_pod else 256
+    got = jax.device_count()
+    if got != want:
+        raise RuntimeError(
+            f"expected {want} global devices for the "
+            f"{'2-pod' if multi_pod else 'single-pod'} mesh, found {got}; "
+            "check slice size / NUM_PROCESSES"
+        )

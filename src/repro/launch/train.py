@@ -1,0 +1,79 @@
+"""End-to-end training driver.
+
+On real hardware this launches the pjit'd train step over the production
+mesh; on this CPU container it trains reduced configs for the e2e example
+(examples/train_lm.py) with the SAME code path: config → sharded state →
+jitted step → checkpoint/restart loop.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --reduce \
+      --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.training import data as data_lib
+from repro.training import train_loop
+from repro.training.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true",
+                    help="shrink to CPU-runnable scale (same structure)")
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="simulate a node failure at this step (then rerun)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced_config(cfg)
+    overrides = {}
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+    if args.vocab:
+        overrides["vocab_size"] = args.vocab
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cfg.validate()
+
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"layers={cfg.num_layers} devices={jax.device_count()}")
+    tcfg = train_loop.TrainConfig(
+        opt=OptConfig(
+            learning_rate=args.lr, warmup_steps=max(args.steps // 20, 5),
+            total_steps=args.steps,
+        ),
+        num_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(args.steps // 4, 10),
+        log_every=max(args.steps // 20, 5),
+        compress_grads=args.compress_grads,
+    )
+    dcfg = data_lib.DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0,
+                               repeat_prob=0.75)
+    state, history = train_loop.train(cfg, tcfg, dcfg, fail_at_step=args.fail_at)
+    for h in history:
+        print(json.dumps(h))
+    print(f"final loss: {history[-1]['loss']:.4f}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.models import blocks, layers, losses, moe, ssm, transformer, xlstm
+from repro.models.transformer import (
+    init_params,
+    param_specs,
+    forward_hidden,
+    loss_fn,
+    decode_step,
+    prefill,
+    init_cache,
+    cache_shapes,
+    count_params,
+)

@@ -1,0 +1,464 @@
+"""Block registry: every architecture is a sequence of these block types.
+
+Types: ``dense`` (GQA attn + MLP), ``moe`` (attn + fine-grained MoE),
+``mla_moe`` (DeepSeek-V2 MLA attn + MoE), ``mamba2``, ``mlstm``, ``slstm``,
+``cross`` (self-attn + gated cross-attn to patch embeddings + MLP),
+``zamba_attn`` (weight-shared attn+MLP block), ``enc`` (non-causal encoder
+block), ``encdec_dec`` (decoder block with cross-attn to encoder output).
+
+Interface per type:
+  spec(cfg)                                     -> ParamSpec tree
+  apply(cfg, p, x, mode, cache, pos, aux)       -> (x, new_cache, aux_loss)
+  cache_shapes(cfg, batch, max_seq)             -> {name: (shape, dtype, axes)}
+
+``mode`` ∈ {"train", "prefill", "decode"}: train = full-seq causal, no cache;
+prefill = full-seq causal writing the cache; decode = one token + cache.
+KV caches are stored FLAT (B, Smax, Hkv·Dh) so TP sharding always divides.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ParamSpec
+from repro.models import layers, moe, ssm, xlstm
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sub-module (shared by dense / moe / cross / zamba / encdec)
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg, cross=False):
+    d = cfg.d_model
+    dh = cfg.head_dim_actual
+    qf = cfg.num_heads * dh
+    kf = cfg.num_kv_heads * dh
+    spec = {
+        "w_q": ParamSpec((d, qf), ("embed", "heads_flat")),
+        "w_k": ParamSpec((d, kf), ("embed", "kv_flat")),
+        "w_v": ParamSpec((d, kf), ("embed", "kv_flat")),
+        "w_o": ParamSpec((qf, d), ("heads_flat", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        spec["b_q"] = ParamSpec((qf,), (None,), init="zeros")
+        spec["b_k"] = ParamSpec((kf,), (None,), init="zeros")
+        spec["b_v"] = ParamSpec((kf,), (None,), init="zeros")
+    return spec
+
+
+def _qkv(p, x, cfg):
+    b, s, _ = x.shape
+    dh = cfg.head_dim_actual
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if "b_q" in p:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    return (
+        q.reshape(b, s, cfg.num_heads, dh),
+        k.reshape(b, s, cfg.num_kv_heads, dh),
+        v.reshape(b, s, cfg.num_kv_heads, dh),
+    )
+
+
+def _self_attn(p, x, cfg, mode, cache, pos, causal=True):
+    """Returns (attn_out (B,S,d), new_cache)."""
+    b, s, _ = x.shape
+    dh = cfg.head_dim_actual
+    kf = cfg.num_kv_heads * dh
+    q, k, v = _qkv(p, x, cfg)
+    if mode == "decode":
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    new_cache = cache
+    if mode == "decode":
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.reshape(b, 1, kf).astype(cache["k"].dtype), pos, axis=1
+        )
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.reshape(b, 1, kf).astype(cache["v"].dtype), pos, axis=1
+        )
+        new_cache = {"k": kc, "v": vc}
+        smax = kc.shape[1]
+        out = layers.decode_attention(
+            q,
+            kc.reshape(b, smax, cfg.num_kv_heads, dh).astype(x.dtype),
+            vc.reshape(b, smax, cfg.num_kv_heads, dh).astype(x.dtype),
+            pos + 1,
+        )
+    else:
+        if mode == "prefill" and cache is not None:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.reshape(b, s, kf).astype(cache["k"].dtype), 0, axis=1
+            )
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.reshape(b, s, kf).astype(cache["v"].dtype), 0, axis=1
+            )
+            new_cache = {"k": kc, "v": vc}
+        out = layers.attention(
+            q, k, v, causal=causal,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        )
+    return out.reshape(b, q.shape[1], -1) @ p["w_o"], new_cache
+
+
+def _attn_cache_shapes(cfg, batch, max_seq, dtype=None):
+    dtype = dtype or getattr(jnp, cfg.cache_dtype)
+    kf = cfg.num_kv_heads * cfg.head_dim_actual
+    return {
+        "k": ((batch, max_seq, kf), dtype, ("batch", "seq_kv", "kv_flat")),
+        "v": ((batch, max_seq, kf), dtype, ("batch", "seq_kv", "kv_flat")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(cfg):
+    return {
+        "ln1": layers.norm_spec(cfg),
+        "attn": _attn_spec(cfg),
+        "ln2": layers.norm_spec(cfg),
+        "mlp": layers.mlp_spec(cfg),
+    }
+
+
+def dense_apply(cfg, p, x, mode, cache, pos, aux):
+    h, new_cache = _self_attn(
+        p["attn"], layers.apply_norm(p["ln1"], x, cfg), cfg, mode, cache, pos
+    )
+    x = x + h
+    x = x + layers.apply_mlp(p["mlp"], layers.apply_norm(p["ln2"], x, cfg), cfg)
+    return x, new_cache, 0.0
+
+
+# ---------------------------------------------------------------------------
+# moe (attn + fine-grained MoE)
+# ---------------------------------------------------------------------------
+
+
+def moe_block_spec(cfg):
+    return {
+        "ln1": layers.norm_spec(cfg),
+        "attn": _attn_spec(cfg),
+        "ln2": layers.norm_spec(cfg),
+        "moe": moe.moe_spec(cfg),
+    }
+
+
+def moe_apply(cfg, p, x, mode, cache, pos, aux):
+    h, new_cache = _self_attn(
+        p["attn"], layers.apply_norm(p["ln1"], x, cfg), cfg, mode, cache, pos
+    )
+    x = x + h
+    y, aux_loss = moe.apply_moe(p["moe"], layers.apply_norm(p["ln2"], x, cfg), cfg)
+    return x + y, new_cache, aux_loss
+
+
+# ---------------------------------------------------------------------------
+# mla_moe (DeepSeek-V2: multi-head latent attention + MoE)
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": ParamSpec((d, cfg.q_lora_rank), ("embed", None)),
+        "q_norm": {"scale": ParamSpec((cfg.q_lora_rank,), (None,), init="zeros")},
+        "w_uq": ParamSpec((cfg.q_lora_rank, h * (nope + rope)), (None, "heads_flat")),
+        "w_dkv": ParamSpec((d, cfg.kv_lora_rank + rope), ("embed", None)),
+        "kv_norm": {"scale": ParamSpec((cfg.kv_lora_rank,), (None,), init="zeros")},
+        "w_ukv": ParamSpec(
+            (cfg.kv_lora_rank, h * (nope + vd)), (None, "heads_flat")
+        ),
+        "w_o": ParamSpec((h * vd, d), ("heads_flat", "embed")),
+    }
+
+
+def _mla_attn(p, x, cfg, mode, cache, pos):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lkv = cfg.kv_lora_rank
+    if mode == "decode":
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cq = layers.rms_norm(x @ p["w_dq"], p["q_norm"]["scale"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(b, s, h, nope + rope)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = layers.apply_rope(q_pe, positions, cfg.rope_theta)
+    dkv = x @ p["w_dkv"]
+    ckv = layers.rms_norm(dkv[..., :lkv], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_pe = layers.apply_rope(
+        dkv[..., lkv:][:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0]  # (B,S,rope) shared across heads
+    w_ukv = p["w_ukv"].reshape(lkv, h, nope + vd)
+    new_cache = cache
+    if mode == "decode":
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1
+        )
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpe"], k_pe.astype(cache["kpe"].dtype), pos, axis=1
+        )
+        new_cache = {"ckv": ckv_c, "kpe": kpe_c}
+        # --- absorbed decode: attention runs in the compressed space ---
+        q_abs = jnp.einsum("bxhn,lhn->bxhl", q_nope, w_ukv[..., :nope])
+        scores = jnp.einsum("bhl,bsl->bhs", q_abs[:, 0], ckv_c)
+        scores = scores + jnp.einsum("bhr,bsr->bhs", q_pe[:, 0], kpe_c)
+        scores = (scores * (nope + rope) ** -0.5).astype(jnp.float32)
+        valid = jnp.arange(ckv_c.shape[1])[None, None, :] < pos + 1
+        scores = jnp.where(valid, scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(ckv_c.dtype)
+        out_c = jnp.einsum("bhs,bsl->bhl", w, ckv_c)
+        out = jnp.einsum("bhl,lhv->bhv", out_c, w_ukv[..., nope:])
+        out = out.reshape(b, 1, h * vd)
+    else:
+        kv = jnp.einsum("bsl,lhd->bshd", ckv, w_ukv)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, rope))],
+            axis=-1,
+        )
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        if mode == "prefill" and cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1
+            )
+            kpe_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["kpe"], k_pe.astype(cache["kpe"].dtype), 0, axis=1
+            )
+            new_cache = {"ckv": ckv_c, "kpe": kpe_c}
+        out = layers.attention(
+            q_full, k, v, causal=True,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        )
+        out = out.reshape(b, s, h * vd)
+    return out @ p["w_o"], new_cache
+
+
+def mla_moe_spec(cfg):
+    return {
+        "ln1": layers.norm_spec(cfg),
+        "attn": mla_spec(cfg),
+        "ln2": layers.norm_spec(cfg),
+        "moe": moe.moe_spec(cfg),
+    }
+
+
+def mla_moe_apply(cfg, p, x, mode, cache, pos, aux):
+    h, new_cache = _mla_attn(
+        p["attn"], layers.apply_norm(p["ln1"], x, cfg), cfg, mode, cache, pos
+    )
+    x = x + h
+    y, aux_loss = moe.apply_moe(p["moe"], layers.apply_norm(p["ln2"], x, cfg), cfg)
+    return x + y, new_cache, aux_loss
+
+
+def _mla_cache_shapes(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    return {
+        "ckv": ((batch, max_seq, cfg.kv_lora_rank), dtype,
+                ("batch", "seq_kv", None)),
+        "kpe": ((batch, max_seq, cfg.qk_rope_dim), dtype,
+                ("batch", "seq_kv", None)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cross (llama-3.2-vision: self-attn + gated cross-attn to patches + MLP)
+# ---------------------------------------------------------------------------
+
+
+def cross_spec(cfg):
+    return {
+        "ln1": layers.norm_spec(cfg),
+        "attn": _attn_spec(cfg),
+        "ln_c": layers.norm_spec(cfg),
+        "xattn": _attn_spec(cfg, cross=True),
+        "gate": ParamSpec((1,), (None,), init="zeros"),
+        "ln2": layers.norm_spec(cfg),
+        "mlp": layers.mlp_spec(cfg),
+    }
+
+
+def _cross_attn(p, x, kv_src, cfg, cache, mode):
+    """Cross-attention; kv (and its cache) come from patch/encoder embeds."""
+    b, s, _ = x.shape
+    dh = cfg.head_dim_actual
+    q = (x @ p["w_q"]).reshape(b, s, cfg.num_heads, dh)
+    if mode == "decode":
+        kf = cfg.num_kv_heads * dh
+        smax = cache["ck"].shape[1]
+        out = layers.decode_attention(
+            q,
+            cache["ck"].reshape(b, smax, cfg.num_kv_heads, dh),
+            cache["cv"].reshape(b, smax, cfg.num_kv_heads, dh),
+            smax,  # all source positions valid
+        )
+        new_cache = cache
+    else:
+        sk = kv_src.shape[1]
+        k = (kv_src @ p["w_k"]).reshape(b, sk, cfg.num_kv_heads, dh)
+        v = (kv_src @ p["w_v"]).reshape(b, sk, cfg.num_kv_heads, dh)
+        out = layers.attention(q, k, v, causal=False)
+        new_cache = cache
+        if mode == "prefill" and cache is not None:
+            kf = cfg.num_kv_heads * dh
+            new_cache = dict(cache)
+            new_cache["ck"] = k.reshape(b, sk, kf).astype(cache["ck"].dtype)
+            new_cache["cv"] = v.reshape(b, sk, kf).astype(cache["cv"].dtype)
+    return out.reshape(b, s, -1) @ p["w_o"], new_cache
+
+
+def cross_apply(cfg, p, x, mode, cache, pos, aux, gated=True):
+    """gated=True: llama-vision style zero-init tanh gate on the cross path
+    (image info fades in during training). gated=False: whisper-style
+    ungated cross-attention (the decoder must hear the encoder at init)."""
+    self_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+    h, new_self = _self_attn(
+        p["attn"], layers.apply_norm(p["ln1"], x, cfg), cfg, mode, self_cache, pos
+    )
+    x = x + h
+    kv_src = None if aux is None else aux.get("patches")
+    hc, new_cross = _cross_attn(
+        p["xattn"], layers.apply_norm(p["ln_c"], x, cfg), kv_src, cfg, cache, mode
+    )
+    if gated:
+        hc = (jnp.tanh(p["gate"])).astype(x.dtype) * hc
+    x = x + hc
+    x = x + layers.apply_mlp(p["mlp"], layers.apply_norm(p["ln2"], x, cfg), cfg)
+    if cache is not None:
+        new_cache = {"k": new_self["k"], "v": new_self["v"],
+                     "ck": new_cross["ck"], "cv": new_cross["cv"]}
+    else:
+        new_cache = None
+    return x, new_cache, 0.0
+
+
+def _cross_cache_shapes(cfg, batch, max_seq, src_seq, dtype=jnp.bfloat16):
+    kf = cfg.num_kv_heads * cfg.head_dim_actual
+    out = _attn_cache_shapes(cfg, batch, max_seq, dtype)
+    out["ck"] = ((batch, src_seq, kf), dtype, ("batch", None, "kv_flat"))
+    out["cv"] = ((batch, src_seq, kf), dtype, ("batch", None, "kv_flat"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# encoder block (whisper) + decoder-with-cross block
+# ---------------------------------------------------------------------------
+
+
+def enc_spec(cfg):
+    return dense_spec(cfg)
+
+
+def enc_apply(cfg, p, x, mode, cache, pos, aux):
+    h, _ = _self_attn(
+        p["attn"], layers.apply_norm(p["ln1"], x, cfg), cfg, "train", None, 0,
+        causal=False,
+    )
+    x = x + h
+    x = x + layers.apply_mlp(p["mlp"], layers.apply_norm(p["ln2"], x, cfg), cfg)
+    return x, None, 0.0
+
+
+def encdec_dec_spec(cfg):
+    return cross_spec(cfg)
+
+
+def encdec_dec_apply(cfg, p, x, mode, cache, pos, aux):
+    aux2 = None if aux is None else {"patches": aux.get("enc_out")}
+    return cross_apply(cfg, p, x, mode, cache, pos, aux2, gated=False)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_SPECS = {
+    "dense": dense_spec,
+    "moe": moe_block_spec,
+    "mla_moe": mla_moe_spec,
+    "mamba2": ssm.mamba2_spec,
+    "mlstm": xlstm.mlstm_spec,
+    "slstm": xlstm.slstm_spec,
+    "cross": cross_spec,
+    "zamba_attn": dense_spec,
+    "enc": enc_spec,
+    "encdec_dec": encdec_dec_spec,
+}
+
+
+def block_spec(cfg, btype):
+    return _SPECS[btype](cfg)
+
+
+def apply_block(cfg, btype, p, x, mode="train", cache=None, pos=0, aux=None):
+    if btype in ("dense", "zamba_attn"):
+        return dense_apply(cfg, p, x, mode, cache, pos, aux)
+    if btype == "moe":
+        return moe_apply(cfg, p, x, mode, cache, pos, aux)
+    if btype == "mla_moe":
+        return mla_moe_apply(cfg, p, x, mode, cache, pos, aux)
+    if btype == "mamba2":
+        if mode == "decode":
+            y, c = ssm.mamba2_decode(p, x, cache, cfg)
+            return x + y, c, 0.0
+        if mode == "prefill" and cache is not None:
+            y, c = ssm.apply_mamba2(p, x, cfg, return_state=True)
+            return x + y, c, 0.0
+        return x + ssm.apply_mamba2(p, x, cfg), cache, 0.0
+    if btype == "mlstm":
+        if mode == "decode":
+            y, c = xlstm.mlstm_decode(p, x, cache, cfg)
+            return x + y, c, 0.0
+        if mode == "prefill" and cache is not None:
+            y, c = xlstm.apply_mlstm(p, x, cfg, return_state=True)
+            return x + y, c, 0.0
+        return x + xlstm.apply_mlstm(p, x, cfg), cache, 0.0
+    if btype == "slstm":
+        if mode == "decode":
+            y, c = xlstm.slstm_decode(p, x, cache, cfg)
+            return x + y, c, 0.0
+        if mode == "prefill" and cache is not None:
+            y, c = xlstm.apply_slstm(p, x, cfg, return_state=True)
+            return x + y, c, 0.0
+        return x + xlstm.apply_slstm(p, x, cfg), cache, 0.0
+    if btype == "cross":
+        return cross_apply(cfg, p, x, mode, cache, pos, aux)
+    if btype == "enc":
+        return enc_apply(cfg, p, x, mode, cache, pos, aux)
+    if btype == "encdec_dec":
+        return encdec_dec_apply(cfg, p, x, mode, cache, pos, aux)
+    raise ValueError(f"unknown block type {btype}")
+
+
+def cache_shapes(cfg, btype, batch, max_seq):
+    """{name: (shape, dtype, logical_axes)} for one block's decode cache."""
+    if btype in ("dense", "moe", "mla_moe", "zamba_attn"):
+        if btype == "mla_moe":
+            return _mla_cache_shapes(cfg, batch, max_seq)
+        return _attn_cache_shapes(cfg, batch, max_seq)
+    if btype == "mamba2":
+        return ssm.mamba2_cache_shapes(cfg, batch)
+    if btype == "mlstm":
+        return xlstm.mlstm_cache_shapes(cfg, batch)
+    if btype == "slstm":
+        return xlstm.slstm_cache_shapes(cfg, batch)
+    if btype == "cross":
+        return _cross_cache_shapes(cfg, batch, max_seq, cfg.vision_seq)
+    if btype == "encdec_dec":
+        return _cross_cache_shapes(cfg, batch, max_seq, cfg.encoder_seq)
+    if btype == "enc":
+        return None
+    raise ValueError(btype)

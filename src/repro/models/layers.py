@@ -1,0 +1,341 @@
+"""Core layers: norms, RoPE, attention (GQA / MQA / MLA / cross), MLPs.
+
+Weight layout: attention projections are stored FLAT — (d_model, H·Dh) —
+with the flattened dim on the ``model`` TP axis, so tensor parallelism
+divides evenly even when the head count does not (e.g. qwen's 40 heads on a
+16-way axis; DESIGN.md §7). Heads are recovered by reshape inside the block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ParamSpec, constrain
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (
+        1.0 + scale.astype(x.dtype)
+    )
+
+
+def layer_norm(x, scale, bias, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out.astype(x.dtype) * scale.astype(x.dtype)) + bias.astype(x.dtype)
+
+
+def norm_spec(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamSpec((d,), (None,), init="ones"),
+            "bias": ParamSpec((d,), (None,), init="zeros"),
+        }
+    return {"scale": ParamSpec((d,), (None,), init="zeros")}
+
+
+def apply_norm(p, x, cfg, eps=None):
+    eps = eps or cfg.norm_eps
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, d, 2, dtype=jnp.float32) / d
+    )  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores (dense, chunked-flash, decode)
+# ---------------------------------------------------------------------------
+
+
+def _plain_attention(q, k, v, causal, q_offset=0):
+    """q (B,Sq,H,Dqk), k (B,Sk,Hkv,Dqk), v (B,Sk,Hkv,Dv). GQA via groups."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(d)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(ki <= qi, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def _chunk_bias(qi, ki, chunk_q, chunk_kv, sk, causal):
+    """Additive f32 bias for one chunk pair, built from CONSTANT (cq,ck)
+    iota comparisons only (diagonal structure is chunk-index-free), so XLA
+    cannot hoist a stacked boolean mask family out of the scan (that mask
+    stack cost 2 GiB/device on the 90B train cell — EXPERIMENTS.md §Perf)."""
+    neg = jnp.float32(-1e30)
+    bias = jnp.zeros((chunk_q, chunk_kv), jnp.float32)
+    if causal and chunk_q == chunk_kv:
+        # same-index (diagonal) chunk: strict upper triangle masked
+        local = jnp.arange(chunk_q)
+        diag_bias = jnp.where(local[None, :] > local[:, None], neg, 0.0)
+        bias = jnp.where(ki == qi, diag_bias, bias)
+    elif causal:
+        qpos = qi * chunk_q + jnp.arange(chunk_q)
+        kpos = ki * chunk_kv + jnp.arange(chunk_kv)
+        bias = jnp.where(kpos[None, :] > qpos[:, None], neg, bias)
+    # right-edge padding (only the last kv chunk can be padded)
+    kpos = ki * chunk_kv + jnp.arange(chunk_kv)
+    bias = jnp.where((kpos >= sk)[None, :], neg, bias)
+    return bias
+
+
+def _flash_fwd_impl(qs, ks, vs, causal, sk):
+    """qs (b,nq,cq,hkv,g,d); ks/vs (b,nk,ck,hkv,·). Returns (out, m, l).
+
+    Causal + cq == ck uses a 3-way branch per chunk pair: chunks strictly
+    above the diagonal are SKIPPED (no FLOPs — halves causal attention
+    compute), the diagonal gets the triangular bias, the rest run unmasked.
+    """
+    b, nq, cq, hkv, g, d = qs.shape
+    nk, ck = ks.shape[1], ks.shape[2]
+    dv = vs.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    skippable = causal and cq == ck
+
+    def q_chunk(_, qi_qc):
+        qi, qc = qi_qc
+
+        def attend(carry, ki, kc, vc):
+            m, l, acc = carry
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32)
+            s = s * scale + _chunk_bias(qi, ki, cq, ck, sk, causal)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc)
+
+        def kv_chunk(carry, ki_kc):
+            ki, kc, vc = ki_kc
+            if skippable:
+                carry = jax.lax.cond(
+                    ki > qi, lambda c: c, lambda c: attend(c, ki, kc, vc), carry
+                )
+            else:
+                carry = attend(carry, ki, kc, vc)
+            return carry, None
+
+        m0 = jnp.full((b, hkv, g, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_chunk,
+            (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0)),
+        )
+        out = (acc / jnp.maximum(l, 1e-20)[..., None]).astype(vs.dtype)
+        return None, (jnp.moveaxis(out, 3, 1), m, l)
+
+    _, (outs, ms, ls) = jax.lax.scan(
+        q_chunk, None, (jnp.arange(nq), jnp.moveaxis(qs, 1, 0))
+    )
+    # outs (nq,b,cq,hkv,g,dv); ms/ls (nq,b,hkv,g,cq)
+    return jnp.moveaxis(outs, 0, 1), jnp.moveaxis(ms, 0, 1), jnp.moveaxis(ls, 0, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, chunk_q, chunk_kv, sk):
+    out, _, _ = _flash_fwd_impl(q, k, v, causal, sk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, chunk_q, chunk_kv, sk):
+    out, m, l = _flash_fwd_impl(q, k, v, causal, sk)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(causal, chunk_q, chunk_kv, sk, res, dout):
+    """Flash backward: recompute p per chunk pair; O(chunk²) memory.
+
+    dv = pᵀ do;  dp = do vᵀ;  ds = p ∘ (dp − Δ), Δ = rowsum(do ∘ o);
+    dq = ds k;  dk = dsᵀ q.  (Dao et al. formulation, chunk-tiled.)"""
+    q, k, v, out, m, l = res
+    b, nq, cq, hkv, g, d = q.shape
+    nk, ck = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    linv = 1.0 / jnp.maximum(l, 1e-20)  # (b,nq,hkv,g,cq)
+    delta = jnp.einsum("bnqhgd,bnqhgd->bnhgq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+    skippable = causal and cq == ck
+
+    def q_chunk(carry, inp):
+        dk_acc, dv_acc = carry
+        qi, qc, doc, mc, lic, dc = inp  # per-q-chunk slices
+
+        def attend(carry2, ki, kc, vc):
+            dq_acc, dk_a, dv_a = carry2
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32)
+            s = s * scale + _chunk_bias(qi, ki, cq, ck, sk, causal)
+            p = jnp.exp(s - mc[..., None]) * lic[..., None]  # normalized probs
+            dvc = jnp.einsum("bhgqk,bqhgd->bkhd", p, doc.astype(jnp.float32))
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc.astype(jnp.float32),
+                            vc.astype(jnp.float32))
+            ds = p * (dp - dc[..., None]) * scale
+            dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc.astype(jnp.float32))
+            dkc = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qc.astype(jnp.float32))
+            dk_a = jax.lax.dynamic_update_index_in_dim(
+                dk_a, dk_a[ki] + dkc, ki, 0
+            )
+            dv_a = jax.lax.dynamic_update_index_in_dim(
+                dv_a, dv_a[ki] + dvc, ki, 0
+            )
+            return (dq_acc + dq_c, dk_a, dv_a)
+
+        def kv_chunk(carry2, ki_kc):
+            ki, kc, vc = ki_kc
+            if skippable:
+                carry2 = jax.lax.cond(
+                    ki > qi, lambda c: c, lambda c: attend(c, ki, kc, vc), carry2
+                )
+            else:
+                carry2 = attend(carry2, ki, kc, vc)
+            return carry2, None
+
+        dq0 = jnp.zeros((b, cq, hkv, g, d), jnp.float32)
+        (dqc, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_chunk,
+            (dq0, dk_acc, dv_acc),
+            (jnp.arange(nk), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0)),
+        )
+        return (dk_acc, dv_acc), dqc
+
+    dk0 = jnp.zeros((nk, b, ck, hkv, d), jnp.float32)
+    dv0 = jnp.zeros((nk, b, ck, hkv, dv), jnp.float32)
+    (dk_out, dv_out), dqs = jax.lax.scan(
+        q_chunk,
+        (dk0, dv0),
+        (
+            jnp.arange(nq),
+            jnp.moveaxis(q, 1, 0),
+            jnp.moveaxis(dout, 1, 0),
+            jnp.moveaxis(m, 1, 0),
+            jnp.moveaxis(linv, 1, 0),
+            jnp.moveaxis(delta, 1, 0),
+        ),
+    )
+    dq = jnp.moveaxis(dqs, 0, 1).astype(q.dtype)
+    dk = jnp.moveaxis(dk_out, 0, 1).astype(k.dtype)
+    dvv = jnp.moveaxis(dv_out, 0, 1).astype(v.dtype)
+    return dq, dk, dvv
+
+
+# optimize_remat: under jax.checkpoint the fwd is re-run in the backward
+# pass instead of stacking (q,k,v,out,m,l) residuals per scanned layer —
+# without this the 90B train cell stacks ~40 GiB of flash residuals
+# across periods (EXPERIMENTS.md §Perf, iteration A4).
+_flash.defvjp(_flash_fwd, _flash_bwd, optimize_remat=True)
+
+
+def _chunked_attention(q, k, v, causal, chunk_q, chunk_kv):
+    """Flash attention with memory-safe custom VJP (O(S·d) residuals,
+    backward recomputes scores per chunk pair) — required for the 4k-train
+    and 32k-prefill cells where dense (or naively saved) score matrices
+    would not fit HBM (DESIGN.md §7)."""
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    nq = -(-sq // chunk_q)
+    nk = -(-sk // chunk_kv)
+    qpad, kpad = nq * chunk_q - sq, nk * chunk_kv - sk
+    q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    qs = q.reshape(b, nq, chunk_q, hkv, g, d)
+    ks = k.reshape(b, nk, chunk_kv, hkv, d)
+    vs = v.reshape(b, nk, chunk_kv, hkv, dv)
+    out = _flash(qs, ks, vs, causal, chunk_q, chunk_kv, sk)
+    out = out.reshape(b, nq * chunk_q, h, dv)[:, :sq]
+    return out.astype(v.dtype)
+
+
+def attention(q, k, v, causal=True, q_offset=0, chunk_q=0, chunk_kv=0):
+    if chunk_q and q.shape[1] > chunk_q:
+        return _chunked_attention(q, k, v, causal, chunk_q, chunk_kv or chunk_q)
+    return _plain_attention(q, k, v, causal, q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """q (B,1,H,D); caches (B,Smax,Hkv,D); positions >= length are masked."""
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
+    s *= 1.0 / math.sqrt(d)
+    valid = jnp.arange(k_cache.shape[1])[None, :] < length  # (1, Smax)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache)
+    return out.reshape(b, 1, h, v_cache.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(cfg, d_in=None, d_ff=None):
+    d_in = d_in or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    gated = cfg.activation in ("swiglu", "geglu")
+    spec = {
+        "w_in": ParamSpec((d_in, d_ff), ("embed", "ff")),
+        "w_out": ParamSpec((d_ff, d_in), ("ff", "embed")),
+    }
+    if gated:
+        spec["w_gate"] = ParamSpec((d_in, d_ff), ("embed", "ff"))
+    return spec
+
+
+def apply_mlp(p, x, cfg):
+    h = x @ p["w_in"]
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * h
+    else:  # gelu
+        h = jax.nn.gelu(h)
+    return h @ p["w_out"]

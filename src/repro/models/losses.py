@@ -1,0 +1,112 @@
+"""Chunked softmax cross-entropy — the (B,S,V) logits tensor is never
+materialized, in EITHER direction (DESIGN.md §7).
+
+Forward: scan over sequence chunks; per chunk the (B,chunk,V) logits are
+consumed by a fused logsumexp/gather. Backward (custom VJP): logits are
+RECOMPUTED per chunk and the (softmax − onehot) cotangent is contracted
+immediately into dhidden and a dembed accumulator — residuals are O(S·D +
+V·D), not O(S·V)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunks(hidden, targets, mask, chunk):
+    b, s, d = hidden.shape
+    pad = (-s) % chunk
+    nc = (s + pad) // chunk
+    hid = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0))).reshape(b, nc, chunk, d)
+    tgt = jnp.pad(targets, ((0, 0), (0, pad))).reshape(b, nc, chunk)
+    msk = jnp.pad(mask, ((0, 0), (0, pad))).reshape(b, nc, chunk)
+    return hid, tgt, msk, nc
+
+
+def _fwd_sums(hidden, embed, targets, mask, vocab_size, chunk):
+    hid, tgt, msk, nc = _chunks(hidden, targets, mask, chunk)
+    vpad = embed.shape[0]
+    pad_cols = jnp.arange(vpad) >= vocab_size
+
+    def body(carry, inp):
+        nll_sum, cnt = carry
+        h, t, m = inp
+        logits = (h @ embed.T).astype(jnp.float32)
+        logits = jnp.where(pad_cols[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - tl) * m
+        return (nll_sum + nll.sum(), cnt + m.sum()), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        body,
+        (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hid, 1, 0), jnp.moveaxis(tgt, 1, 0), jnp.moveaxis(msk, 1, 0)),
+    )
+    return nll_sum, cnt
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _xent(hidden, embed, targets, mask, vocab_size, chunk):
+    nll_sum, cnt = _fwd_sums(hidden, embed, targets, mask, vocab_size, chunk)
+    return nll_sum / jnp.maximum(cnt, 1.0)
+
+
+def _xent_fwd(hidden, embed, targets, mask, vocab_size, chunk):
+    nll_sum, cnt = _fwd_sums(hidden, embed, targets, mask, vocab_size, chunk)
+    return nll_sum / jnp.maximum(cnt, 1.0), (hidden, embed, targets, mask, cnt)
+
+
+def _xent_bwd(vocab_size, chunk, res, g):
+    hidden, embed, targets, mask, cnt = res
+    b, s, d = hidden.shape
+    hid, tgt, msk, nc = _chunks(hidden, targets, mask, chunk)
+    vpad = embed.shape[0]
+    pad_cols = jnp.arange(vpad) >= vocab_size
+    scale = g / jnp.maximum(cnt, 1.0)
+    embf = embed.astype(jnp.float32)
+
+    def body(dembed, inp):
+        h, t, m = inp  # (B,chunk,D), (B,chunk), (B,chunk)
+        logits = (h @ embed.T).astype(jnp.float32)
+        logits = jnp.where(pad_cols[None, None, :], -1e30, logits)
+        w = (m * scale)[..., None]
+        dlogits = jax.nn.softmax(logits, axis=-1) * w  # (B,chunk,Vpad)
+        # subtract the one-hot target term via scatter (no V-sized one-hot)
+        tgt_val = jnp.take_along_axis(dlogits, t[..., None], axis=-1) - w
+        dlogits = jnp.put_along_axis(
+            dlogits, t[..., None], tgt_val, axis=-1, inplace=False
+        )
+        dh = (dlogits @ embf).astype(h.dtype)
+        dembed = dembed + jnp.einsum(
+            "bcv,bcd->vd", dlogits, h.astype(jnp.float32)
+        )
+        return dembed, dh
+
+    dembed0 = jnp.zeros(embed.shape, jnp.float32)
+    dembed, dhs = jax.lax.scan(
+        body,
+        dembed0,
+        (jnp.moveaxis(hid, 1, 0), jnp.moveaxis(tgt, 1, 0), jnp.moveaxis(msk, 1, 0)),
+    )
+    dhidden = jnp.moveaxis(dhs, 0, 1).reshape(b, nc * chunk, d)[:, :s]
+    return dhidden.astype(hidden.dtype), dembed.astype(embed.dtype), None, None
+
+
+_xent.defvjp(_xent_fwd, _xent_bwd)
+
+
+def chunked_softmax_xent(
+    hidden: jnp.ndarray,  # (B, S, D)
+    embed: jnp.ndarray,  # (Vpad, D) — tied softmax weights
+    targets: jnp.ndarray,  # (B, S) int32
+    vocab_size: int,  # true vocab (pad ids masked out)
+    chunk: int = 512,
+    mask: jnp.ndarray | None = None,  # (B, S) 1.0 = count
+) -> jnp.ndarray:
+    b, s, _ = hidden.shape
+    chunk = min(chunk, s)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    return _xent(hidden, embed, targets, mask.astype(jnp.float32), vocab_size, chunk)

@@ -1,0 +1,184 @@
+"""Mamba2 (SSD) block — chunked state-space dual form.
+
+Training/prefill uses the chunked SSD algorithm: within-chunk interactions are
+dense L×L matmuls (MXU-friendly), across-chunk state is a short ``lax.scan``
+recurrence over (B,H,N,P) states. Decode is the O(1) recurrent update. All
+decays are exponentials of non-positive numbers (A < 0), so the chunked form
+is numerically stable without extra rescaling.
+
+Layout notes: the SSD inner dim carries the ``inner`` logical axis (→ model
+TP); heads H = inner/P shard implicitly through it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ParamSpec, constrain
+from repro.models import layers
+
+SSD_CHUNK = 128
+
+
+def mamba2_spec(cfg):
+    d, inner = cfg.d_model, cfg.ssm_inner
+    n, h, k = cfg.ssm_state, cfg.ssm_heads, cfg.conv_kernel
+    conv_dim = inner + 2 * n
+    return {
+        "in_proj": ParamSpec((d, 2 * inner + 2 * n + h), ("embed", "inner")),
+        "conv_w": ParamSpec((k, conv_dim), (None, "inner"), scale=k**-0.5),
+        "conv_b": ParamSpec((conv_dim,), ("inner",), init="zeros"),
+        "a_log": ParamSpec((h,), (None,), init="ones"),
+        "d_skip": ParamSpec((h,), (None,), init="ones"),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+        "norm": ParamSpec((inner,), ("inner",), init="zeros"),
+        "out_proj": ParamSpec((inner, d), ("inner", "embed")),
+    }
+
+
+def _split_proj(p, x, cfg):
+    inner, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :inner]
+    xbc = zxbcdt[..., inner : 2 * inner + 2 * n]
+    dt_raw = zxbcdt[..., 2 * inner + 2 * n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xbc, dt  # dt: f32 (…, H)
+
+
+def _causal_conv(p, xbc, cfg):
+    """Depthwise causal conv over seq via K shifted adds (K = 4)."""
+    k = cfg.conv_kernel
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        shift = k - 1 - i
+        shifted = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * p["conv_w"][i]
+    return jax.nn.silu(out + p["conv_b"].astype(out.dtype))
+
+
+def _gated_out(p, y, z, cfg):
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def apply_mamba2(p, x, cfg, chunk=SSD_CHUNK, return_state=False):
+    """x (B,S,D) -> (B,S,D) [, decode cache]. Chunked SSD scan."""
+    b, s, _ = x.shape
+    inner, n, h, pd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(p, x, cfg)
+    z = constrain(z, ("batch", None, "inner"))
+    xbc = constrain(xbc, ("batch", None, "inner"))
+    xbc_raw = xbc  # pre-conv (the decode conv cache holds raw channels)
+    xbc = _causal_conv(p, xbc, cfg)
+    xv = xbc[..., :inner]
+    bmat = xbc[..., inner : inner + n].astype(jnp.float32)
+    cmat = xbc[..., inner + n :].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) < 0
+
+    l = min(chunk, s)
+    pad = (-s) % l
+    nc = (s + pad) // l
+
+    def pad_c(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2)).reshape(
+            (b, nc, l) + t.shape[2:]
+        )
+
+    xh = pad_c(xv).reshape(b, nc, l, h, pd)  # compute dtype; f32 inside body
+    xh = constrain(xh, ("batch", None, None, "inner", None))
+    dtc = pad_c(dt.astype(x.dtype))  # (B,nc,L,H)
+    dtc = constrain(dtc, ("batch", None, None, "inner"))
+    bc = pad_c(bmat.astype(x.dtype))  # (B,nc,L,N)
+    cc = pad_c(cmat.astype(x.dtype))
+
+    @jax.checkpoint
+    def chunk_step(t_prev, inp):
+        xcv, dts, bs, cs = (t.astype(jnp.float32) for t in inp)
+        # xcv (B,L,H,P), dts (B,L,H), bs/cs (B,L,N)
+        da = dts * a  # (B,L,H) <= 0
+        cum = jnp.cumsum(da, axis=1)  # inclusive
+        # --- intra-chunk (dense, MXU) ---
+        scores = jnp.einsum("bln,bmn->blm", cs, bs)  # (B,L,L) t,s
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,L,L,H)
+        tmask = (
+            jnp.arange(l)[:, None] >= jnp.arange(l)[None, :]
+        )  # t >= s
+        m = jnp.where(
+            tmask[None, :, :, None], scores[..., None] * decay, 0.0
+        ) * dts[:, None, :, :]  # (B,L,L,H)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", m, xcv)
+        # --- inter-chunk (carry state) ---
+        y_inter = jnp.einsum("bln,bhnp->blhp", cs, t_prev) * jnp.exp(cum)[
+            ..., None
+        ]
+        # --- state update ---
+        tot = cum[:, -1, :]  # (B,H)
+        w = jnp.exp(tot[:, None, :] - cum) * dts  # (B,L,H)
+        s_c = jnp.einsum("bln,blh,blhp->bhnp", bs, w, xcv)
+        t_new = jnp.exp(tot)[:, :, None, None] * t_prev + s_c
+        return t_new, y_intra + y_inter
+
+    t0 = jnp.zeros((b, h, n, pd), jnp.float32)
+    t_final, ys = jax.lax.scan(
+        chunk_step,
+        t0,
+        (
+            jnp.moveaxis(xh, 1, 0),
+            jnp.moveaxis(dtc, 1, 0),
+            jnp.moveaxis(bc, 1, 0),
+            jnp.moveaxis(cc, 1, 0),
+        ),
+    )
+    ys = constrain(ys, (None, "batch", None, "inner", None))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * l, h, pd)[:, :s]
+    y = y + xv.reshape(b, s, h, pd).astype(jnp.float32) * p["d_skip"].astype(
+        jnp.float32
+    )[:, None]
+    y = y.reshape(b, s, inner).astype(x.dtype)
+    out = _gated_out(p, y, z, cfg)
+    if return_state:
+        k = cfg.conv_kernel
+        conv = jnp.pad(
+            xbc_raw.astype(jnp.float32), ((0, 0), (max(k - 1 - s, 0), 0), (0, 0))
+        )[:, -(k - 1):]
+        return out, {"state": t_final, "conv": conv}
+    return out
+
+
+def mamba2_cache_shapes(cfg, batch):
+    n, h, pd, k = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.conv_kernel
+    conv_dim = cfg.ssm_inner + 2 * n
+    return {
+        "state": ((batch, h, n, pd), jnp.float32, ("batch", None, None, None)),
+        "conv": ((batch, k - 1, conv_dim), jnp.float32, ("batch", None, "inner")),
+    }
+
+
+def mamba2_decode(p, x, cache, cfg):
+    """x (B,1,D) + recurrent state -> (y (B,1,D), new cache)."""
+    b = x.shape[0]
+    inner, n, h, pd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(p, x, cfg)  # (B,1,·)
+    conv_in = jnp.concatenate(
+        [cache["conv"], xbc.astype(jnp.float32)], axis=1
+    )  # (B,K,conv)
+    xbc_t = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )
+    new_conv = conv_in[:, 1:]
+    xv = xbc_t[:, :inner].reshape(b, h, pd)
+    bmat = xbc_t[:, inner : inner + n]
+    cmat = xbc_t[:, inner + n :]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0] * a)  # (B,H)
+    state = cache["state"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt[:, 0], bmat, xv
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat, state) + xv * p["d_skip"].astype(
+        jnp.float32
+    )[:, None]
+    y = y.reshape(b, 1, inner).astype(x.dtype)
+    out = _gated_out(p, y, z, cfg)
+    return out, {"state": state, "conv": new_conv}

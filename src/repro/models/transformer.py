@@ -1,0 +1,343 @@
+"""Model assembler: period-grouped scan over heterogeneous block stacks.
+
+``cfg.types`` (one block type per layer) is factored into
+``(period, num_periods, tail)`` — e.g. zamba2's 81 layers become 13 scanned
+periods of [5×mamba2, zamba_attn] plus a 3-layer mamba2 tail; dense models
+are period=1 scans. Scanning periods keeps compile time flat in depth and
+bounds HLO size (DESIGN.md §7). Weight-shared blocks (zamba_attn) live
+OUTSIDE the scanned stack and are closed over; their per-occurrence caches
+stay inside the scanned cache pytree.
+
+Activation checkpointing: each scanned period body is wrapped in
+``jax.checkpoint`` when ``cfg.remat == "block"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (
+    ParamSpec,
+    init_from_specs,
+    maybe_shard_activations,
+)
+from repro.models import blocks, layers, losses
+
+SHARED_TYPES = {"zamba_attn"}  # weight-shared across occurrences
+
+
+# ---------------------------------------------------------------------------
+# layer-pattern factorization
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    period: tuple[str, ...]  # block types inside one scanned period
+    num_periods: int
+    tail: tuple[str, ...]  # trailing uniform run (scanned separately)
+
+
+def factor_pattern(types: tuple[str, ...], max_period: int = 8) -> Pattern:
+    n = len(types)
+    for p in range(1, max_period + 1):
+        reps = n // p
+        if reps == 0:
+            break
+        prefix_ok = all(types[i] == types[i % p] for i in range(reps * p))
+        tail = types[reps * p :]
+        if prefix_ok and len(set(tail)) <= 1:
+            return Pattern(tuple(types[:p]), reps, tuple(tail))
+    return Pattern(tuple(types), 1, ())  # fallback: single unrolled period
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _stack_specs(spec_tree, reps: int):
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            (reps,) + s.shape, ("layers",) + s.axes, init=s.init, scale=s.scale
+        ),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_specs(cfg):
+    pat = factor_pattern(cfg.types)
+    spec = {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed")),
+        "final_norm": layers.norm_spec(cfg),
+    }
+    main = {}
+    for i, bt in enumerate(pat.period):
+        if bt in SHARED_TYPES:
+            continue
+        main[f"slot{i}_{bt}"] = _stack_specs(blocks.block_spec(cfg, bt), pat.num_periods)
+    spec["main"] = main
+    if pat.tail:
+        spec["tail"] = {
+            f"tail_{pat.tail[0]}": _stack_specs(
+                blocks.block_spec(cfg, pat.tail[0]), len(pat.tail)
+            )
+        }
+    shared = {}
+    for bt in dict.fromkeys(t for t in cfg.types if t in SHARED_TYPES):
+        shared[bt] = blocks.block_spec(cfg, bt)
+    if shared:
+        spec["shared"] = shared
+    if cfg.is_encdec:
+        spec["encoder"] = {
+            "blocks": _stack_specs(blocks.block_spec(cfg, "enc"), cfg.encoder_layers),
+            "final_norm": layers.norm_spec(cfg),
+        }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamSpec(
+            (cfg.padded_vocab, cfg.d_model), ("vocab", "embed")
+        )
+    return spec
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    return init_from_specs(param_specs(cfg), key, dtype)
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Analytic parameter count from the spec tree (exact)."""
+    spec = param_specs(cfg)
+    total = 0
+    frac = cfg.moe_top_k / cfg.num_experts if cfg.num_experts else 1.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )[0]:
+        n = math.prod(leaf.shape)
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if active_only and "moe/w_" in keys:
+            n = int(n * frac)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(positions, d):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens]
+    if cfg.pos_embed == "absolute":
+        pos = jnp.arange(tokens.shape[1])[None, :]
+        x = x + _sinusoidal(pos, cfg.d_model).astype(x.dtype)
+    return x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+
+def _run_stack(params_stack, types, cfg, x, mode, caches, pos, aux, shared):
+    """Scan over a stacked homogeneous-period block group.
+
+    params_stack: {slotname: stacked tree}; caches: {slotname|sharedname:
+    stacked cache tree} (stack dim = num_periods); shared: {bt: params}.
+    """
+    num_reps = None
+    for v in jax.tree.leaves(params_stack):
+        num_reps = v.shape[0]
+        break
+    if num_reps is None:  # all blocks in this stack are weight-shared
+        num_reps = len(jax.tree.leaves(caches)) and jax.tree.leaves(caches)[0].shape[0]
+
+    def period_body(x, slice_i):
+        p_i, c_i = slice_i
+        aux_loss = jnp.zeros((), jnp.float32)
+        new_c = {}
+        for j, bt in enumerate(types):
+            name = f"slot{j}_{bt}"
+            if bt in SHARED_TYPES:
+                bp = shared[bt]
+            else:
+                bp = p_i[name]
+            bc = None if c_i is None else c_i.get(f"cache{j}")
+            x, bc, al = blocks.apply_block(
+                cfg, bt, bp, x, mode=mode, cache=bc, pos=pos, aux=aux
+            )
+            aux_loss = aux_loss + al
+            if bc is not None:
+                new_c[f"cache{j}"] = bc
+        return x, (new_c or None, aux_loss)
+
+    body = period_body
+    if cfg.remat == "block" and mode == "train":
+        body = jax.checkpoint(period_body)
+
+    def scan_body(carry, slice_i):
+        x, aux_sum = carry
+        if mode in ("train", "prefill"):
+            x = maybe_shard_activations(x)  # SP: seq on `model` between blocks
+        x, (new_c, al) = body(x, slice_i)
+        return (x, aux_sum + al), new_c
+
+    (x, aux_sum), new_caches = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), (params_stack, caches),
+        length=num_reps,
+    )
+    return x, new_caches, aux_sum
+
+
+def _stacks(cfg):
+    """Yields (group_name, period_types, param_key) for main + tail."""
+    pat = factor_pattern(cfg.types)
+    out = [("main", pat.period, None)]
+    if pat.tail:
+        out.append(("tail", (pat.tail[0],) * len(pat.tail), None))
+    return pat, out
+
+
+def forward_hidden(params, tokens, cfg, mode="train", caches=None, pos=0, aux=None):
+    """Token ids -> final hidden states. Returns (hidden, new_caches, aux_loss)."""
+    pat, groups = _stacks(cfg)
+    x = _embed(params, tokens, cfg)
+    if aux is not None:  # modality-frontend stubs follow the compute dtype
+        aux = {
+            k: (v.astype(x.dtype) if hasattr(v, "astype") else v)
+            for k, v in aux.items()
+        }
+    if cfg.is_encdec and aux is not None and "enc_frames" in aux:
+        enc = aux["enc_frames"]
+        if cfg.pos_embed == "absolute":
+            enc = enc + _sinusoidal(
+                jnp.arange(enc.shape[1])[None, :], cfg.d_model
+            ).astype(enc.dtype)
+        enc, _, _ = _run_stack(
+            {"slot0_enc": params["encoder"]["blocks"]},
+            ("enc",), cfg, enc, "train", None, 0, None, {},
+        )
+        enc = layers.apply_norm(params["encoder"]["final_norm"], enc, cfg)
+        aux = dict(aux)
+        aux["enc_out"] = enc
+    shared = params.get("shared", {})
+    new_caches = {} if caches is not None else None
+    aux_total = 0.0
+    for gname, gtypes, _ in groups:
+        pstack = params.get(gname, {})
+        if gname == "tail":
+            pstack = {f"slot0_{gtypes[0]}": pstack[f"tail_{gtypes[0]}"]}
+            gtypes_run = (gtypes[0],)
+            reps = len(gtypes)
+        else:
+            gtypes_run = gtypes
+            reps = pat.num_periods
+        cstack = None if caches is None else caches.get(gname)
+        x, ncache, al = _run_stack(
+            pstack, gtypes_run, cfg, x, mode, cstack, pos, aux, shared
+        )
+        aux_total = aux_total + al
+        if new_caches is not None:
+            new_caches[gname] = ncache
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    return x, new_caches, aux_total
+
+
+def logits_from_hidden(params, hidden, cfg):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = hidden @ head.T
+    pad_cols = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+    return jnp.where(pad_cols[None, None, :], -1e30, logits.astype(jnp.float32))
+
+
+def cast_for_compute(params, cfg):
+    """Mixed precision: matrix params compute in bf16, vectors (norms, biases)
+    stay f32. Differentiable (grads flow back to the f32 masters)."""
+    if cfg.dtype != "bfloat16":
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16)
+        if p.dtype == jnp.float32 and p.ndim >= 2
+        else p,
+        params,
+    )
+
+
+def loss_fn(params, batch, cfg):
+    """batch: tokens (B,S), targets (B,S), optional enc_frames / patches."""
+    params = cast_for_compute(params, cfg)
+    aux = {k: batch[k] for k in ("enc_frames", "patches") if k in batch}
+    hidden, _, aux_loss = forward_hidden(
+        params, batch["tokens"], cfg, mode="train", aux=aux or None
+    )
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    nll = losses.chunked_softmax_xent(
+        hidden, head, batch["targets"], cfg.vocab_size,
+        chunk=cfg.xent_chunk, mask=batch.get("mask"),
+    )
+    total = nll + 0.01 * aux_loss
+    return total, {"nll": nll, "aux_loss": aux_loss}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache construction + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg, batch, max_seq):
+    """Full cache pytree of (shape, dtype, logical_axes), grouped like params."""
+    pat, groups = _stacks(cfg)
+    out = {}
+    for gname, gtypes, _ in groups:
+        reps = pat.num_periods if gname == "main" else 1
+        if gname == "tail":
+            gtypes_run = (gtypes[0],)
+            reps = len(gtypes)
+        else:
+            gtypes_run = gtypes
+        slots = {}
+        for j, bt in enumerate(gtypes_run):
+            cs = blocks.cache_shapes(cfg, bt, batch, max_seq)
+            if cs is None:
+                continue
+            slots[f"cache{j}"] = {
+                k: ((reps,) + shape, dtype, (None,) + axes)
+                for k, (shape, dtype, axes) in cs.items()
+            }
+        out[gname] = slots or None
+    return out
+
+
+def init_cache(cfg, batch, max_seq, mode="zeros"):
+    shapes = cache_shapes(cfg, batch, max_seq)
+
+    def mk(leaf):
+        shape, dtype, _ = leaf
+        return jnp.zeros(shape, dtype)
+
+    return jax.tree.map(
+        mk, shapes, is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple)
+    )
+
+
+def decode_step(params, caches, tokens, pos, cfg, aux=None):
+    """One-token decode. tokens (B,1); pos scalar int32. -> (logits, caches)."""
+    hidden, new_caches, _ = forward_hidden(
+        params, tokens, cfg, mode="decode", caches=caches, pos=pos, aux=aux
+    )
+    return logits_from_hidden(params, hidden, cfg), new_caches
+
+
+def prefill(params, tokens, cfg, max_seq, aux=None):
+    """Full-sequence forward that fills a fresh cache. -> (logits, caches)."""
+    caches = init_cache(cfg, tokens.shape[0], max_seq)
+    hidden, new_caches, _ = forward_hidden(
+        params, tokens, cfg, mode="prefill", caches=caches, pos=0, aux=aux
+    )
+    return logits_from_hidden(params, hidden, cfg), new_caches

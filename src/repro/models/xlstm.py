@@ -1,0 +1,273 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, recurrent scan).
+
+mLSTM trains in a chunkwise-parallel form structurally identical to SSD:
+within-chunk terms are dense L×L MXU matmuls gated by cumulative forget-gate
+decays, the across-chunk (B,H,P,P) matrix memory is a short scan. Exponential
+input gates are computed in f32 without the paper's running-max stabilizer
+(noted simplification — gates are sigmoid/softplus-bounded here, so exponents
+are ≤ 0 and the chunked form stays stable).
+
+sLSTM is inherently sequential (real recurrence with block-diagonal recurrent
+weights); it runs as a ``lax.scan`` over time. xlstm-1.3b places it on 1 of
+every 8 layers, so the serial fraction stays small.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ParamSpec, constrain
+from repro.models import layers
+
+MLSTM_CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg):
+    inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    return inner, h, inner // h
+
+
+def mlstm_spec(cfg):
+    d = cfg.d_model
+    inner, h, pd = _mlstm_dims(cfg)
+    return {
+        "up_proj": ParamSpec((d, 2 * inner), ("embed", "inner"), scale=d**-0.5),
+        "conv_w": ParamSpec(
+            (cfg.conv_kernel, inner), (None, "inner"), scale=cfg.conv_kernel**-0.5
+        ),
+        "conv_b": ParamSpec((inner,), ("inner",), init="zeros"),
+        # headwise (block-diagonal) projections, as in the official xLSTM
+        "w_q": ParamSpec((h, pd, pd), (None, "inner", None), scale=pd**-0.5),
+        "w_k": ParamSpec((h, pd, pd), (None, "inner", None), scale=pd**-0.5),
+        "w_v": ParamSpec((h, pd, pd), (None, "inner", None), scale=pd**-0.5),
+        "w_if": ParamSpec((inner, 2 * h), ("inner", None), scale=0.01),
+        "b_if": ParamSpec((2 * h,), (None,), init="zeros"),
+        "norm": ParamSpec((inner,), ("inner",), init="zeros"),
+        "down_proj": ParamSpec((inner, d), ("inner", "embed"), scale=inner**-0.5),
+    }
+
+
+def _mlstm_gates(p, xm, h):
+    """log-forget (<=0) and log-input (<=0) gates, f32. (B,S,H) each."""
+    gates = (xm @ p["w_if"]).astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(gates[..., :h])
+    logi = jax.nn.log_sigmoid(gates[..., h:])
+    return logf, logi
+
+
+def apply_mlstm(p, x, cfg, chunk=MLSTM_CHUNK, return_state=False):
+    b, s, d = x.shape
+    inner, h, pd = _mlstm_dims(cfg)
+    up = constrain(x @ p["up_proj"], ("batch", None, "inner"))
+    xm, z = up[..., :inner], up[..., inner:]
+    xc = jnp.zeros_like(xm)
+    for i in range(cfg.conv_kernel):  # causal conv4 front
+        shift = cfg.conv_kernel - 1 - i
+        xc = xc + jnp.pad(xm, ((0, 0), (shift, 0), (0, 0)))[:, :s] * p["conv_w"][i]
+    xc = jax.nn.silu(xc + p["conv_b"].astype(xc.dtype))
+    xch = xc.reshape(b, s, h, pd)
+    xmh = xm.reshape(b, s, h, pd)
+    q = jnp.einsum("bshp,hpq->bshq", xch, p["w_q"]).astype(jnp.float32)
+    k = jnp.einsum("bshp,hpq->bshq", xch, p["w_k"]).astype(jnp.float32) * pd**-0.5
+    v = jnp.einsum("bshp,hpq->bshq", xmh, p["w_v"]).astype(jnp.float32)
+    q = constrain(q, ("batch", None, None, "inner"))
+    k = constrain(k, ("batch", None, None, "inner"))
+    v = constrain(v, ("batch", None, None, "inner"))
+    logf, logi = _mlstm_gates(p, xm, h)
+
+    l = min(chunk, s)
+    pad = (-s) % l
+    nc = (s + pad) // l
+
+    def pad_c(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2)).reshape(
+            (b, nc, l) + t.shape[2:]
+        )
+
+    qs, ks, vs = pad_c(q), pad_c(k), pad_c(v)
+    lfs, lis = pad_c(logf), pad_c(logi)
+
+    @jax.checkpoint
+    def chunk_step(carry, inp):
+        cmat, nvec = carry  # (B,H,P,P), (B,H,P)
+        qc, kc, vc, lf, li = inp
+        fcum = jnp.cumsum(lf, axis=1)  # (B,L,H)
+        # D(t,s) = exp(Fcum_t − Fcum_s + logi_s), s<=t  — all exponents <= 0
+        dmat = jnp.exp(
+            fcum[:, :, None, :] - fcum[:, None, :, :] + li[:, None, :, :]
+        )
+        tmask = jnp.arange(l)[:, None] >= jnp.arange(l)[None, :]
+        dmat = jnp.where(tmask[None, :, :, None], dmat, 0.0)
+        scores = jnp.einsum("blhp,bmhp->blmh", qc, kc) * dmat
+        y_intra = jnp.einsum("blmh,bmhp->blhp", scores, vc)
+        n_intra = scores.sum(axis=2)  # (B,L,H)
+        decay_t = jnp.exp(fcum)[..., None]  # (B,L,H,1)
+        y_inter = jnp.einsum("blhp,bhpq->blhq", qc, cmat) * decay_t
+        n_inter = jnp.einsum("blhp,bhp->blh", qc, nvec) * decay_t[..., 0]
+        denom = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)[..., None]
+        y = (y_intra + y_inter) / denom
+        # carry update
+        tot = fcum[:, -1, :]  # (B,H)
+        wdec = jnp.exp(tot[:, None, :] - fcum + li)  # (B,L,H)
+        c_new = jnp.exp(tot)[:, :, None, None] * cmat + jnp.einsum(
+            "blh,blhp,blhq->bhpq", wdec, kc, vc
+        )
+        n_new = jnp.exp(tot)[:, :, None] * nvec + jnp.einsum(
+            "blh,blhp->bhp", wdec, kc
+        )
+        return (c_new, n_new), y
+
+    c0 = jnp.zeros((b, h, pd, pd), jnp.float32)
+    n0 = jnp.zeros((b, h, pd), jnp.float32)
+    (c_f, n_f), ys = jax.lax.scan(
+        chunk_step,
+        (c0, n0),
+        tuple(jnp.moveaxis(t, 1, 0) for t in (qs, ks, vs, lfs, lis)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * l, inner)[:, :s].astype(x.dtype)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["down_proj"]
+    if return_state:
+        k = cfg.conv_kernel
+        conv = jnp.pad(
+            xm.astype(jnp.float32), ((0, 0), (max(k - 1 - s, 0), 0), (0, 0))
+        )[:, -(k - 1):]
+        return out, {"c": c_f, "n": n_f, "conv": conv}
+    return out
+
+
+def mlstm_cache_shapes(cfg, batch):
+    inner, h, pd = _mlstm_dims(cfg)
+    return {
+        "c": ((batch, h, pd, pd), jnp.float32, ("batch", None, None, "inner")),
+        "n": ((batch, h, pd), jnp.float32, ("batch", None, None)),
+        "conv": (
+            (batch, cfg.conv_kernel - 1, inner), jnp.float32,
+            ("batch", None, "inner"),
+        ),
+    }
+
+
+def mlstm_decode(p, x, cache, cfg):
+    b = x.shape[0]
+    inner, h, pd = _mlstm_dims(cfg)
+    up = x @ p["up_proj"]
+    xm, z = up[..., :inner], up[..., inner:]
+    conv_in = jnp.concatenate(
+        [cache["conv"], xm.astype(jnp.float32)], axis=1
+    )  # (B,K,inner)
+    xc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    ).astype(x.dtype)
+    new_conv = conv_in[:, 1:]
+    xch = xc.reshape(b, h, pd)
+    xmh = xm.reshape(b, h, pd)
+    q = jnp.einsum("bhp,hpq->bhq", xch, p["w_q"]).astype(jnp.float32)
+    k = jnp.einsum("bhp,hpq->bhq", xch, p["w_k"]).astype(jnp.float32) * pd**-0.5
+    v = jnp.einsum("bhp,hpq->bhq", xmh, p["w_v"]).astype(jnp.float32)
+    logf, logi = _mlstm_gates(p, xm[:, 0], h)  # (B,H)
+    f, i = jnp.exp(logf), jnp.exp(logi)
+    c_new = f[:, :, None, None] * cache["c"] + i[:, :, None, None] * jnp.einsum(
+        "bhp,bhq->bhpq", k, v
+    )
+    n_new = f[:, :, None] * cache["n"] + i[:, :, None] * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)), 1.0)
+    y = (num / den[..., None]).reshape(b, 1, inner).astype(x.dtype)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["down_proj"], {"c": c_new, "n": n_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_dims(cfg):
+    h = cfg.num_heads
+    return h, cfg.d_model // h
+
+
+def slstm_spec(cfg):
+    d = cfg.d_model
+    h, pd = _slstm_dims(cfg)
+    ff = int(cfg.slstm_proj_factor * d)
+    return {
+        "w_gates": ParamSpec((d, 4 * d), ("embed", "inner"), scale=d**-0.5),
+        "r_gates": ParamSpec((h, pd, 4 * pd), (None, None, None), scale=pd**-0.5),
+        "b_gates": ParamSpec((4 * d,), ("inner",), init="zeros"),
+        "norm": ParamSpec((d,), (None,), init="zeros"),
+        "out_proj": ParamSpec((d, d), ("embed", None), scale=d**-0.5),
+        "ffn": {
+            "w_in": ParamSpec((d, ff), ("embed", "ff"), scale=d**-0.5),
+            "w_gate": ParamSpec((d, ff), ("embed", "ff"), scale=d**-0.5),
+            "w_out": ParamSpec((ff, d), ("ff", "embed"), scale=ff**-0.5),
+        },
+    }
+
+
+def _slstm_cell(p, xt, state, cfg):
+    """One recurrent step. xt (B,D); state dict of (B,H,Pd)."""
+    b = xt.shape[0]
+    h, pd = _slstm_dims(cfg)
+    gx = (xt @ p["w_gates"] + p["b_gates"].astype(xt.dtype)).reshape(
+        b, h, 4 * pd
+    )
+    gr = jnp.einsum("bhp,hpq->bhq", state["h"], p["r_gates"])
+    g = (gx + gr).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)  # (B,H,Pd) each
+    m_new = jnp.maximum(ft + state["m"], it)  # stabilizer state
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + state["m"] - m_new)
+    c = f * state["c"] + i * jnp.tanh(zt)
+    n = f * state["n"] + i
+    hid = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "m": m_new, "h": hid}
+
+
+def apply_slstm(p, x, cfg, return_state=False):
+    b, s, d = x.shape
+    h, pd = _slstm_dims(cfg)
+    state0 = {
+        k: jnp.zeros((b, h, pd), jnp.float32) for k in ("c", "n", "m", "h")
+    }
+
+    @jax.checkpoint
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state, cfg)
+        return new, new["h"]
+
+    state_f, hs = jax.lax.scan(step, state0, jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps) @ p["out_proj"]
+    ffn_in = y
+    ff = jax.nn.silu(ffn_in @ p["ffn"]["w_gate"]) * (ffn_in @ p["ffn"]["w_in"])
+    out = y + ff @ p["ffn"]["w_out"]
+    if return_state:
+        return out, state_f
+    return out
+
+
+def slstm_cache_shapes(cfg, batch):
+    h, pd = _slstm_dims(cfg)
+    return {
+        k: ((batch, h, pd), jnp.float32, ("batch", None, None))
+        for k in ("c", "n", "m", "h")
+    }
+
+
+def slstm_decode(p, x, cache, cfg):
+    b = x.shape[0]
+    new = _slstm_cell(p, x[:, 0], cache, cfg)
+    y = new["h"].reshape(b, 1, -1).astype(x.dtype)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps) @ p["out_proj"]
+    ff = jax.nn.silu(y @ p["ffn"]["w_gate"]) * (y @ p["ffn"]["w_in"])
+    return y + ff @ p["ffn"]["w_out"], new

@@ -1,0 +1,64 @@
+"""Batched serving loop: greedy/temperature decode with a jitted serve_step.
+
+``make_serve_step`` is the function the dry-run lowers for the decode cells:
+one new token for the whole batch against a KV cache of ``max_seq``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+
+def make_serve_step(cfg):
+    """serve_step(params, caches, tokens (B,1), pos) -> (next_tokens, caches)."""
+
+    def serve_step(params, caches, tokens, pos, aux=None):
+        logits, caches = transformer.decode_step(
+            params, caches, tokens, pos, cfg, aux=aux
+        )
+        nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        return nxt[:, None].astype(jnp.int32), caches
+
+    return serve_step
+
+
+def generate(
+    params,
+    cfg,
+    prompts: jnp.ndarray,  # (B, P) int32 prompt tokens
+    max_new: int = 32,
+    max_seq: int | None = None,
+    aux=None,
+    use_prefill: bool = True,
+):
+    """Greedy generation: the prompt is consumed by a single parallel
+    prefill (filling KV caches / recurrent states — exact for every arch,
+    validated by tests), then ``max_new`` tokens decode one at a time.
+    ``use_prefill=False`` falls back to token-by-token prompt processing."""
+    b, plen = prompts.shape
+    max_seq = max_seq or (plen + max_new)
+    step = jax.jit(make_serve_step(cfg))
+    out = []
+    if use_prefill:
+        logits, caches = transformer.prefill(params, prompts, cfg, max_seq, aux=aux)
+        tok = jnp.argmax(
+            logits[:, -1:, : cfg.vocab_size], axis=-1
+        ).astype(jnp.int32)
+        out.append(tok[:, 0])
+        start = plen
+    else:
+        caches = transformer.init_cache(cfg, b, max_seq)
+        tok = prompts[:, :1]
+        start = 0
+    for t in range(start, plen + max_new - 1):
+        nxt, caches = step(params, caches, tok, jnp.int32(t), aux=aux)
+        if t + 1 < plen:
+            tok = prompts[:, t + 1 : t + 2]  # teacher-force the prompt
+        else:
+            tok = nxt
+            out.append(nxt[:, 0])
+    return jnp.stack(out, axis=1)  # (B, max_new)

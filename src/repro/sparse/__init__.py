@@ -1,0 +1,19 @@
+from repro.sparse.matrix import COOMatrix, block_rows, matrix_stats
+from repro.sparse.io import (
+    generate_schenk_like,
+    augment_system,
+    load_matrix_market,
+    save_matrix_market,
+    make_problem,
+)
+
+__all__ = [
+    "COOMatrix",
+    "block_rows",
+    "matrix_stats",
+    "generate_schenk_like",
+    "augment_system",
+    "load_matrix_market",
+    "save_matrix_market",
+    "make_problem",
+]

@@ -1,0 +1,96 @@
+"""Sparse-matrix substrate.
+
+TPUs have no sparse MXU path and the paper itself densifies each row block
+before QR (``.toarray()`` in its Dask implementation), so the substrate keeps a
+COO representation for ingest/generation/statistics and materializes dense
+row blocks per worker shard (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class COOMatrix:
+    """Minimal COO sparse matrix (numpy-side; ingest only, never on device)."""
+
+    rows: np.ndarray  # (nnz,) int32
+    cols: np.ndarray  # (nnz,) int32
+    vals: np.ndarray  # (nnz,) float
+    shape: tuple[int, int]
+
+    def __post_init__(self) -> None:
+        if self.rows.shape != self.cols.shape or self.rows.shape != self.vals.shape:
+            raise ValueError("rows/cols/vals must have identical shapes")
+        m, n = self.shape
+        if self.rows.size and (self.rows.max() >= m or self.cols.max() >= n):
+            raise ValueError("index out of bounds for declared shape")
+
+    @property
+    def nnz(self) -> int:
+        return int(self.vals.size)
+
+    @property
+    def sparsity(self) -> float:
+        m, n = self.shape
+        return 100.0 * (1.0 - self.nnz / float(m * n))
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.vals.dtype)
+        out[self.rows, self.cols] = self.vals
+        return out
+
+    def row_block(self, start: int, stop: int) -> np.ndarray:
+        """Densify rows [start, stop) — the per-worker decompress step."""
+        mask = (self.rows >= start) & (self.rows < stop)
+        out = np.zeros((stop - start, self.shape[1]), dtype=self.vals.dtype)
+        out[self.rows[mask] - start, self.cols[mask]] = self.vals[mask]
+        return out
+
+    def matvec(self, x: np.ndarray) -> np.ndarray:
+        out = np.zeros(self.shape[0], dtype=np.result_type(self.vals, x))
+        np.add.at(out, self.rows, self.vals * x[self.cols])
+        return out
+
+    @staticmethod
+    def from_dense(a: np.ndarray) -> "COOMatrix":
+        rows, cols = np.nonzero(a)
+        return COOMatrix(
+            rows.astype(np.int32), cols.astype(np.int32), a[rows, cols], a.shape
+        )
+
+
+def block_rows(a: COOMatrix | np.ndarray, b: np.ndarray, num_blocks: int):
+    """Uniform row partition into ``num_blocks`` dense blocks (J, p, n) + (J, p).
+
+    The paper's reference implementation folds the remainder rows into the last
+    block; for SPMD we need uniform blocks, so the remainder rows are re-mixed
+    into extra *consistent* rows (random combinations of existing equations,
+    exactly the paper's eq. 8 augmentation) to pad the final block.
+    """
+    m = a.shape[0]
+    n = a.shape[1]
+    p = -(-m // num_blocks)  # ceil
+    pad = p * num_blocks - m
+    dense = a.to_dense() if isinstance(a, COOMatrix) else np.asarray(a)
+    if pad:
+        rng = np.random.default_rng(0)
+        g = rng.standard_normal((pad, m)) / np.sqrt(m)
+        dense = np.concatenate([dense, g @ dense], axis=0)
+        b = np.concatenate([b, g @ b], axis=0)
+    blocks = dense.reshape(num_blocks, p, n)
+    bvecs = b.reshape(num_blocks, p)
+    return blocks, bvecs
+
+
+def matrix_stats(a: COOMatrix) -> dict:
+    vals = a.vals
+    return {
+        "shape": a.shape,
+        "nnz": a.nnz,
+        "sparsity_pct": a.sparsity,
+        "mean": float(vals.mean()) if vals.size else 0.0,
+        "std": float(vals.std()) if vals.size else 0.0,
+    }

@@ -1,0 +1,110 @@
+"""Sharding-aware checkpointing with elastic restore (DESIGN.md §7).
+
+Layout: ``<dir>/step_<N>/manifest.json`` + one ``.npz`` per host process
+(single-process here; the format carries process metadata so a multi-host
+writer is a loop change, not a format change). The manifest records the
+LOGICAL shapes/dtypes and the tree structure, so a checkpoint written on one
+mesh restores onto any other mesh ("elastic resharding" = load logical array,
+device_put with the new sharding).
+
+Fault tolerance: writes go to a temp dir + atomic rename; ``latest_step``
+scans for the newest COMPLETE checkpoint (manifest present), so a crash
+mid-write never corrupts restart. Retention keeps the last ``keep`` steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = {}
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        named[key] = leaf
+    return named, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    named, _ = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {k: np.asarray(v) for k, v in named.items()}
+    np.savez(os.path.join(tmp, "shards_p0.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "format": 1,
+        "num_processes": 1,
+        "leaves": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in arrays.items()
+        },
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+            os.path.join(ckpt_dir, name, "manifest.json")
+        ):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``. ``shardings`` (optional
+    matching pytree of NamedSharding) re-lays the arrays onto ANY mesh —
+    elastic restore after scaling the worker count up or down."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shards_p0.npz"))
+    named_like, treedef = _flatten(like_tree)
+    leaves = []
+    shard_named = None
+    if shardings is not None:
+        shard_named, _ = _flatten(shardings)
+    for key, like in named_like.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        want_shape = tuple(np.shape(like))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {want_shape}"
+            )
+        if shard_named is not None:
+            leaves.append(jax.device_put(arr, shard_named[key]))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,45 @@
+"""Synthetic token pipeline: deterministic, shardable, restart-exact.
+
+Each batch is generated from ``fold_in(seed, step)`` so a restarted run
+consumes identical data with zero host state — the property that makes
+checkpoint/restart bit-reproducible (tested). The generator produces a
+structured Zipf-ish token stream with short-range repetition so that tiny
+models show a real learning signal (loss decreases) rather than flat noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    repeat_prob: float = 0.5  # learnable short-range structure
+
+
+def make_batch(cfg: DataConfig, step: int):
+    """Returns {"tokens": (B, S), "targets": (B, S)} for this step."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, s = cfg.global_batch, cfg.seq_len + 1
+    # Zipf-ish marginal via squared uniform
+    u = jax.random.uniform(k1, (b, s))
+    fresh = (u * u * (cfg.vocab_size - 1)).astype(jnp.int32)
+    # with prob repeat_prob, repeat the previous token (learnable signal)
+    rep = jax.random.uniform(k2, (b, s)) < cfg.repeat_prob
+    shifted = jnp.pad(fresh, ((0, 0), (1, 0)))[:, :s]
+    toks = jnp.where(rep, shifted, fresh)
+    return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+def host_iterator(cfg: DataConfig, start_step: int = 0):
+    step = start_step
+    while True:
+        yield make_batch(cfg, step)
+        step += 1

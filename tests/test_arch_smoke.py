@@ -1,0 +1,136 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward /
+train step on CPU, asserting output shapes and no NaNs. The FULL configs are
+exercised only via the dry-run (launch/dryrun.py, ShapeDtypeStructs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.models import transformer
+
+
+def _batch(cfg, key, b=2, s=16):
+    toks = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+    if cfg.vision_seq:
+        batch["patches"] = (
+            0.1 * jax.random.normal(key, (b, cfg.vision_seq, cfg.d_model))
+        )
+    if cfg.is_encdec:
+        batch["enc_frames"] = (
+            0.1 * jax.random.normal(key, (b, cfg.encoder_seq, cfg.d_model))
+        )
+    return batch
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10, ARCHS
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_validates(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    assert len(cfg.types) == cfg.num_layers
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.param_count() > 0
+
+
+def test_full_param_counts_in_band():
+    """Analytic param counts should be in the ballpark the names claim."""
+    bands = {
+        "zamba2-7b": (5e9, 9.5e9),
+        "xlstm-1.3b": (0.9e9, 2.2e9),
+        "deepseek-moe-16b": (13e9, 20e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "gemma-7b": (7e9, 10e9),
+        "granite-3-8b": (7e9, 10e9),
+        "qwen1.5-32b": (28e9, 36e9),
+        "granite-3-2b": (2e9, 4e9),
+        "llama-3.2-vision-90b": (75e9, 100e9),
+        "whisper-small": (0.15e9, 0.4e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One loss+grad step on the reduced config: finite loss, finite grads."""
+    cfg = reduced_config(get_config(arch))
+    cfg.validate()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: transformer.loss_fn(p, batch, cfg), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss)), f"{arch} loss not finite"
+    assert float(loss) > 0.5  # random-init LM must not be degenerate
+    gleaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in gleaves), arch
+    assert any(float(jnp.abs(g).max()) > 0 for g in gleaves), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = reduced_config(get_config(arch))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    b, smax = 2, 24
+    cache = transformer.init_cache(cfg, b, smax)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    aux = {}
+    if cfg.vision_seq:
+        aux["patches"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.vision_seq, cfg.d_model)
+        )
+    if cfg.is_encdec:
+        aux["enc_frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.encoder_seq, cfg.d_model)
+        )
+    logits, new_cache = transformer.decode_step(
+        params, cache, tok, jnp.int32(0), cfg, aux=aux or None
+    )
+    assert logits.shape == (b, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits[..., : cfg.vocab_size])).all(), arch
+    # cache structure preserved
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize(
+    "arch", ["granite-3-2b", "zamba2-7b", "xlstm-1.3b", "deepseek-v2-236b"]
+)
+def test_decode_matches_teacher_forcing(arch):
+    """Token-by-token decode must reproduce the train-mode forward."""
+    cfg = reduced_config(get_config(arch))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    s = 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab_size)
+    hid, _, _ = transformer.forward_hidden(params, toks, cfg)
+    full = transformer.logits_from_hidden(params, hid, cfg)
+    cache = transformer.init_cache(cfg, 2, s)
+    outs = []
+    for t in range(s):
+        lg, cache = transformer.decode_step(
+            params, cache, toks[:, t : t + 1], jnp.int32(t), cfg
+        )
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    scale = float(jnp.max(jnp.abs(full[..., : cfg.vocab_size]))) + 1e-6
+    np.testing.assert_allclose(
+        np.asarray(dec[..., : cfg.vocab_size]),
+        np.asarray(full[..., : cfg.vocab_size]),
+        atol=5e-3 * scale,
+    )
+
+
+def test_long_context_applicability():
+    from repro.configs.shapes import SHAPES, applicable
+
+    runs = {a: applicable(get_config(a), SHAPES["long_500k"])[0] for a in ARCHS}
+    assert runs["zamba2-7b"] and runs["xlstm-1.3b"]
+    assert not runs["gemma-7b"] and not runs["deepseek-v2-236b"]
+    assert sum(runs.values()) == 2

@@ -1,0 +1,158 @@
+"""Distributed (shard_map) solver tests.
+
+In-process tests run on the single CPU device (1-device mesh exercises the
+full SPMD code path). The multi-device tests spawn a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main test
+process keeps seeing exactly one device (required by the smoke tests).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dapc, distributed, partition_system
+from repro.sparse import make_problem
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def test_sharded_matches_single_host():
+    prob = make_problem(n=64, m=256, seed=2, dtype=np.float32)
+    part = partition_system(prob.A, prob.b, 8)
+    ref = jnp.asarray(prob.x_true)
+    x_s, h_s = distributed.solve_sharded(
+        part.blocks, part.bvecs, _mesh1(), part.mode,
+        num_epochs=60, x_ref=ref,
+    )
+    x_l, h_l = dapc.solve_dapc(part, 1.0, 0.9, 60, x_ref=ref, materialize_p=False)
+    np.testing.assert_allclose(np.asarray(x_s), np.asarray(x_l), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(h_s["mse"]), np.asarray(h_l["mse"]), rtol=1e-3, atol=1e-10
+    )
+
+
+def test_sharded_classical_apc():
+    prob = make_problem(n=48, m=192, seed=4, dtype=np.float32)
+    part = partition_system(prob.A, prob.b, 8)
+    x, hist = distributed.solve_sharded(
+        part.blocks, part.bvecs, _mesh1(), part.mode,
+        method="apc", num_epochs=80, x_ref=jnp.asarray(prob.x_true),
+    )
+    assert float(hist["mse"][-1]) < 1e-8
+
+
+def test_straggler_consensus_converges():
+    """Stale consensus (30% dropped updates/epoch) must still converge —
+    the η-EMA absorbs missing contributions (straggler mitigation story)."""
+    prob = make_problem(n=64, m=256, seed=6, dtype=np.float32)
+    part = partition_system(prob.A, prob.b, 8)
+    x, hist = distributed.solve_sharded(
+        part.blocks, part.bvecs, _mesh1(), part.mode,
+        num_epochs=250, straggler_prob=0.3, x_ref=jnp.asarray(prob.x_true),
+    )
+    assert float(hist["mse"][-1]) < 1e-7
+    # and it costs extra epochs vs the synchronous run (sanity of simulation)
+    _, h_sync = distributed.solve_sharded(
+        part.blocks, part.bvecs, _mesh1(), part.mode,
+        num_epochs=250, x_ref=jnp.asarray(prob.x_true),
+    )
+    assert float(h_sync["mse"][60]) <= float(hist["mse"][60]) * 1.01
+
+
+def test_repartition_elastic():
+    """8-worker partition re-split to 4 (scale-down) keeps the solution."""
+    prob = make_problem(n=64, m=512, seed=8, dtype=np.float32)
+    part = partition_system(prob.A, prob.b, 8)
+    b2, v2 = distributed.repartition(part.blocks, part.bvecs, 4)
+    assert b2.shape == (4, 128, 64)
+    x, hist = distributed.solve_sharded(
+        b2, v2, _mesh1(), "tall", num_epochs=5, x_ref=jnp.asarray(prob.x_true)
+    )
+    assert float(hist["mse"][-1]) < 1e-6  # tall blocks: exact block solves
+
+
+MULTI_DEVICE_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import dapc, distributed, partition_system
+    from repro.sparse import make_problem
+
+    assert jax.device_count() == 8, jax.device_count()
+    prob = make_problem(n=64, m=256, seed=2, dtype=np.float32)
+    part = partition_system(prob.A, prob.b, 8)
+    ref = jnp.asarray(prob.x_true)
+
+    # --- row-sharded over data=4 (2 local blocks per shard) -----------------
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    x_s, h_s = distributed.solve_sharded(
+        part.blocks, part.bvecs, mesh, part.mode, num_epochs=60, x_ref=ref)
+    x_l, h_l = dapc.solve_dapc(part, 1.0, 0.9, 60, x_ref=ref, materialize_p=False)
+    np.testing.assert_allclose(np.asarray(x_s), np.asarray(x_l), atol=1e-5)
+    print("row-sharded OK", float(h_s["mse"][-1]))
+
+    # --- 8-way block sharding over both axes --------------------------------
+    mesh8 = jax.make_mesh((8,), ("data",))
+    x_8, h_8 = distributed.solve_sharded(
+        part.blocks, part.bvecs, mesh8, part.mode, num_epochs=60, x_ref=ref)
+    np.testing.assert_allclose(np.asarray(x_8), np.asarray(x_l), atol=1e-5)
+    print("8-way OK", float(h_8["mse"][-1]))
+
+    # --- 2D: blocks on data=4, solution dim on model=2 ----------------------
+    blocks_t = jnp.swapaxes(part.blocks, 1, 2)  # (J, n, p)
+    x_2d, h_2d = distributed.solve_sharded_2d(
+        blocks_t, part.bvecs, mesh, num_epochs=60, x_ref=ref)
+    np.testing.assert_allclose(np.asarray(x_2d), np.asarray(x_l), atol=1e-4)
+    assert float(h_2d["mse"][-1]) < 1e-9
+    print("2D TSQR OK", float(h_2d["mse"][-1]))
+    """
+)
+
+
+@pytest.mark.slow
+def test_multi_device_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", MULTI_DEVICE_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "2D TSQR OK" in out.stdout
+
+
+def test_elastic_restart_mid_solve():
+    """Fault-tolerance for the solver workload itself: crash after 40
+    epochs, scale from 8 workers down to 4 (elastic repartition), restore
+    x̄ from the 'checkpoint', and converge to the same answer — APC state
+    is reconstructible from (A, b) + x̄ alone (DESIGN.md §7)."""
+    from repro.core import dapc as dapc_mod
+
+    prob = make_problem(n=64, m=512, seed=13, dtype=np.float32)
+    part8 = partition_system(prob.A, prob.b, 8)
+    ref = jnp.asarray(prob.x_true)
+    # phase 1: 8 workers, 40 epochs, then "crash" (keep only x̄)
+    xbar_ckpt, h1 = dapc_mod.solve_dapc(
+        part8, 1.0, 0.9, 40, x_ref=ref, materialize_p=False
+    )
+    # phase 2: rebuild on 4 workers (different block layout), warm start
+    b4, v4 = distributed.repartition(part8.blocks, part8.bvecs, 4)
+    part4 = dataclasses.replace(part8, blocks=b4, bvecs=v4)
+    x_final, h2 = dapc_mod.solve_dapc(
+        part4, 1.0, 0.9, 120, x_ref=ref, materialize_p=False,
+        xbar0=jnp.asarray(xbar_ckpt),
+    )
+    assert float(h2["mse"][-1]) < 1e-9
+    # warm start must not regress below the checkpointed accuracy
+    assert float(h2["mse"][0]) < float(h1["mse"][0])
+

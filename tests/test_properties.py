@@ -1,0 +1,110 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dapc, projections
+from repro.core.consensus import run_consensus
+from repro.sparse import augment_system, generate_schenk_like
+from repro.sparse.matrix import COOMatrix
+
+jax.config.update("jax_enable_x64", False)  # exercised in f32 like production
+
+
+dims = st.tuples(
+    st.integers(min_value=8, max_value=48),   # n
+    st.integers(min_value=2, max_value=6),    # p divisor -> p < n
+    st.integers(min_value=0, max_value=10_000),  # seed
+)
+
+
+def _rand_block(n, p, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((p, n)).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims)
+def test_projector_is_idempotent_symmetric_annihilating(args):
+    """P = I − WᵀW must satisfy P² = P, P = Pᵀ, A P = 0 (projection onto
+    null(A)) for any full-rank wide block — the algebra behind eq. (4)."""
+    n, div, seed = args
+    p = max(1, n // div - 1)
+    a = _rand_block(n, p, seed)
+    w, _ = projections.qr_factor(jnp.asarray(a), "wide")
+    P = projections.materialize(w)
+    np.testing.assert_allclose(np.asarray(P @ P), np.asarray(P), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(P), np.asarray(P.T), atol=5e-6)
+    np.testing.assert_allclose(np.asarray(a @ P), 0.0, atol=5e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims)
+def test_implicit_equals_materialized(args):
+    n, div, seed = args
+    p = max(1, n // div - 1)
+    a = _rand_block(n, p, seed)
+    w, _ = projections.qr_factor(jnp.asarray(a), "wide")
+    v = jnp.asarray(np.random.default_rng(seed + 1).standard_normal(n), jnp.float32)
+    got = projections.apply_projection(w, v)
+    want = projections.materialize(w) @ v
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims)
+def test_initial_solution_solves_block(args):
+    """x_j(0) must satisfy A_j x_j(0) = b_j (min-norm solution property)."""
+    n, div, seed = args
+    p = max(1, n // div - 1)
+    a = _rand_block(n, p, seed)
+    b = np.random.default_rng(seed + 2).standard_normal(p).astype(np.float32)
+    x0s, _ = dapc.setup_decomposed(jnp.asarray(a)[None], jnp.asarray(b)[None], "wide")
+    np.testing.assert_allclose(np.asarray(a @ x0s[0]), b, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=16, max_value=64), st.integers(min_value=0, max_value=99))
+def test_augmentation_preserves_solution(n, seed):
+    """Paper eq. (8): augmented rows are combinations -> same solution set."""
+    coo = generate_schenk_like(n, sparsity=0.9, seed=seed)
+    A = coo.to_dense()
+    x = np.random.default_rng(seed).standard_normal(n)
+    b = A @ x
+    A2, b2 = augment_system(A, b, n * 3, seed=seed + 1)
+    np.testing.assert_allclose(A2 @ x, b2, atol=1e-8 * max(1.0, np.abs(b2).max()))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=10, max_value=200), st.integers(min_value=0, max_value=99))
+def test_coo_roundtrip_and_stats(n, seed):
+    coo = generate_schenk_like(n, sparsity=0.95, seed=seed)
+    dense = coo.to_dense()
+    back = COOMatrix.from_dense(dense)
+    np.testing.assert_allclose(back.to_dense(), dense)
+    assert coo.sparsity >= 90.0
+    # block extraction == dense slicing
+    half = n // 2
+    np.testing.assert_allclose(coo.row_block(0, half), dense[:half])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.floats(min_value=0.1, max_value=1.0),
+    st.floats(min_value=0.1, max_value=0.99),
+    st.integers(min_value=0, max_value=50),
+)
+def test_consensus_fixed_point(gamma, eta, seed):
+    """If every x_j(0) equals the true solution, the iteration is a fixed
+    point: P_j(x̄ − x_j) = 0 identically."""
+    rng = np.random.default_rng(seed)
+    n, p, J = 24, 8, 3
+    blocks = jnp.asarray(rng.standard_normal((J, p, n)), jnp.float32)
+    x_true = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    bvecs = jnp.einsum("jpn,n->jp", blocks, x_true)
+    x0s = jnp.tile(x_true[None], (J, 1))
+    _, Ws = dapc.setup_decomposed(blocks, bvecs, "wide")
+    apply_fn = dapc.make_apply(Ws, materialize_p=False)
+    xbar, _ = run_consensus(x0s, apply_fn, gamma, eta, 10)
+    np.testing.assert_allclose(np.asarray(xbar), np.asarray(x_true), atol=1e-5)
