@@ -1,0 +1,121 @@
+"""Amortized-setup + batched multi-RHS benchmark for the prepare/solve split.
+
+Three ways to serve k solve requests against one system A:
+  * cold       — k × ``solve(A, b_i)``: re-partition + re-QR per request
+                 (the seed API's only shape);
+  * prepared   — ``prepare(A)`` once, k × ``prepared.solve(b_i)``: setup
+                 amortized, iteration still dispatched per request;
+  * batched    — ``prepare(A)`` once, ONE ``prepared.solve(B)`` with
+                 B = [b_1 … b_k]: all k consensus iterations in one
+                 compiled program, projector application as (p,n)×(n,k)
+                 MXU matmuls.
+
+Acceptance gate (ISSUE 1): batched (or prepared) must beat cold by ≥ 3× at
+--quick scale, and the batched solution must match the per-column solves to
+≤ 1e-5 relative error.  Standalone:
+
+    PYTHONPATH=src python benchmarks/multirhs.py --quick
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:  # standalone `python benchmarks/multirhs.py`
+    sys.path.insert(0, _SRC)
+
+from repro.core import prepare, solve  # noqa: E402
+from repro.sparse import make_problem  # noqa: E402
+
+
+def run(quick: bool = False, num_rhs: int = 64):
+    n, m, num_blocks, epochs = (256, 1024, 8, 40) if quick else (1024, 4096, 8, 60)
+    prob = make_problem(n=n, m=m, seed=3, dtype=np.float32)
+    rng = np.random.default_rng(11)
+    xs = rng.standard_normal((n, num_rhs)).astype(np.float32)
+    B = prob.A @ xs
+
+    kw = dict(num_blocks=num_blocks, materialize_p=False)
+
+    # cold: the seed behaviour — full setup on every request
+    t0 = time.perf_counter()
+    cold = [solve(prob.A, B[:, i], num_epochs=epochs, **kw) for i in range(num_rhs)]
+    t_cold = time.perf_counter() - t0
+
+    # prepared: setup once, sequential solves
+    prep = prepare(prob.A, **kw)
+    t0 = time.perf_counter()
+    seq = [prep.solve(B[:, i], num_epochs=epochs) for i in range(num_rhs)]
+    t_seq = time.perf_counter() - t0
+
+    # batched: setup once, one (n, k) program
+    t0 = time.perf_counter()
+    batched = prep.solve(B, num_epochs=epochs)
+    t_batched = time.perf_counter() - t0
+
+    seq_x = np.stack([r.x for r in seq], axis=1)
+    denom = np.abs(seq_x).max() + 1e-30
+    rel_err = float(np.abs(batched.x - seq_x).max() / denom)
+    rel_truth = float(np.abs(batched.x - xs).max() / (np.abs(xs).max() + 1e-30))
+    resid = float(np.max(np.asarray(batched.final_residual)))
+
+    rows = [
+        {
+            "name": f"multirhs/cold_{num_rhs}x_{m}x{n}",
+            "us_per_call": t_cold / num_rhs * 1e6,
+            "derived": f"total={t_cold:.3f}s one_shot_wall={cold[0].wall_seconds:.3f}s",
+        },
+        {
+            "name": f"multirhs/prepared_{num_rhs}x_{m}x{n}",
+            "us_per_call": t_seq / num_rhs * 1e6,
+            "derived": (
+                f"total={t_seq:.3f}s setup_once={prep.setup_seconds:.3f}s "
+                f"amortized_speedup={t_cold / t_seq:.2f}x"
+            ),
+        },
+        {
+            "name": f"multirhs/batched_{num_rhs}x_{m}x{n}",
+            "us_per_call": t_batched / num_rhs * 1e6,
+            "derived": (
+                f"total={t_batched:.3f}s speedup_vs_cold={t_cold / t_batched:.2f}x "
+                f"speedup_vs_sequential={t_seq / t_batched:.2f}x "
+                f"relerr_vs_sequential={rel_err:.1e} relerr_vs_truth={rel_truth:.1e} "
+                f"residual_sq_max={resid:.1e}"
+            ),
+        },
+    ]
+    checks = {
+        "speedup_vs_cold": t_cold / t_batched,
+        "relerr_vs_sequential": rel_err,
+    }
+    return rows, checks
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--rhs", type=int, default=64)
+    args = ap.parse_args()
+
+    rows, checks = run(quick=args.quick, num_rhs=args.rhs)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+
+    ok = checks["speedup_vs_cold"] >= 3.0 and checks["relerr_vs_sequential"] <= 1e-5
+    print(
+        f"acceptance: batched_vs_cold={checks['speedup_vs_cold']:.2f}x (need >=3x), "
+        f"relerr={checks['relerr_vs_sequential']:.1e} (need <=1e-5) -> "
+        f"{'PASS' if ok else 'FAIL'}"
+    )
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

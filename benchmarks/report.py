@@ -11,7 +11,7 @@ import os
 from repro.configs import ARCHS
 from repro.configs.shapes import SHAPES
 
-from benchmarks.roofline import MESHES, cell_row, suggestion
+from benchmarks.roofline import cell_row, suggestion
 
 
 def load_artifacts(artifacts_dir="artifacts/dryrun"):

@@ -9,7 +9,6 @@ memory fit and the compiled collective schedule.
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 

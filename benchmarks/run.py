@@ -1,11 +1,20 @@
 """Benchmark harness — one section per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks problem sizes.
+Exits nonzero when any section raises, so the CI bench-smoke job fails
+loudly on kernel regressions instead of printing an ERROR row and passing.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
+
+# self-bootstrapping: `python benchmarks/run.py` works without PYTHONPATH
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:
@@ -13,31 +22,36 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
-        choices=["convergence", "speedup", "kernels", "roofline"],
+        choices=["convergence", "speedup", "kernels", "roofline", "multirhs"],
     )
     args = ap.parse_args()
 
-    from benchmarks import convergence, kernels, roofline, speedup
+    from benchmarks import convergence, kernels, multirhs, roofline, speedup
 
     sections = {
         "convergence": lambda: convergence.run(quick=args.quick)[0],
         "speedup": lambda: speedup.run(quick=args.quick),
         "kernels": lambda: kernels.run(quick=args.quick),
         "roofline": lambda: roofline.run(quick=args.quick),
+        "multirhs": lambda: multirhs.run(quick=args.quick)[0],
     }
     if args.only:
         sections = {args.only: sections[args.only]}
 
+    failed = []
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         try:
             for row in fn():
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
-        except Exception as e:  # keep the harness running; report the failure
+        except Exception as e:  # report the failure, keep later sections running
+            failed.append(name)
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
             import traceback
 
             traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(f"benchmark sections failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

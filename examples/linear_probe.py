@@ -8,7 +8,6 @@ readouts without ever forming (HᵀH)⁻¹.
     PYTHONPATH=src python examples/linear_probe.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config

@@ -1,12 +1,17 @@
 """Paper §5 worked example + Fig 2 comparison at (18252×4563)-like scale
-(scaled to CPU budget; pass --full for the paper's exact shape).
+(scaled to CPU budget; pass --full for the paper's exact shape), plus the
+prepare/solve split: the factorization is computed once and amortized over
+a stream of right-hand sides — one batched (m, k) solve runs every system
+in a single compiled program.
 
     PYTHONPATH=src python examples/solve_sparse.py [--full]
 """
 import argparse
+import time
+
 import numpy as np
 
-from repro.core import solve
+from repro.core import prepare, solve
 from repro.sparse import make_problem, matrix_stats
 
 ap = argparse.ArgumentParser()
@@ -35,3 +40,21 @@ print(f"\nacceleration (classical/decomposed): {acc:.2f}x "
 x = results["dapc"].x
 print(f"solution vector: mean={x.mean():.4f} std={x.std():.4f} "
       f"(paper §5: mu~-0.0027 sigma~0.0763 for its dataset)")
+
+# --- prepare/solve: amortize Algorithm 1 steps 1-4 over many RHS ----------
+k = 8
+rng = np.random.default_rng(7)
+X = rng.standard_normal((n, k)).astype(np.float32)
+B = prob.A @ X  # k consistent systems sharing A
+
+prep = prepare(prob.A, method="dapc", num_blocks=4, materialize_p=False)
+print(f"\nprepare(A): setup {prep.setup_seconds:.3f}s "
+      f"(QR factors cached for {prep.num_blocks} blocks)")
+
+t0 = time.perf_counter()
+batched = prep.solve(B, num_epochs=95)
+t_batched = time.perf_counter() - t0
+err = np.abs(batched.x - X).max() / np.abs(X).max()
+print(f"batched solve of {k} RHS in one program: {t_batched:.2f}s "
+      f"(vs {results['dapc'].wall_seconds:.2f}s for ONE cold solve), "
+      f"max rel err to truth {err:.1e}")

@@ -9,7 +9,6 @@ dry-run proves the same step function lowers on the 512-chip mesh.
     PYTHONPATH=src python examples/train_lm.py --small --steps 150
 """
 import argparse
-import dataclasses
 
 from repro.configs.base import ModelConfig
 from repro.training import data as data_lib

@@ -1,9 +1,21 @@
 """The paper's primary contribution: (Decomposed) Accelerated
 Projection-Based Consensus solvers + the DGD baseline."""
-from repro.core.partition import Partition, partition_system, resolve_mode
-from repro.core.solver_api import SolveResult, solve
-from repro.core.apc import solve_apc, setup_classical
-from repro.core.dapc import solve_dapc, setup_decomposed, make_apply
+from repro.core.partition import (
+    Partition,
+    block_rhs,
+    partition_matrix,
+    partition_system,
+    resolve_mode,
+)
+from repro.core.solver_api import PreparedSolver, SolveResult, prepare, solve
+from repro.core.apc import solve_apc, setup_classical, classical_factors
+from repro.core.dapc import (
+    solve_dapc,
+    setup_decomposed,
+    make_apply,
+    qr_blocks,
+    initial_from_factors,
+)
 from repro.core.dgd import solve_dgd
 from repro.core.cg import solve_cgnr
 from repro.core.consensus import run_consensus, tune_hyperparams, block_residual_sq
@@ -11,14 +23,21 @@ from repro.core.consensus import run_consensus, tune_hyperparams, block_residual
 __all__ = [
     "Partition",
     "partition_system",
+    "partition_matrix",
+    "block_rhs",
     "resolve_mode",
     "SolveResult",
+    "PreparedSolver",
+    "prepare",
     "solve",
     "solve_apc",
     "setup_classical",
+    "classical_factors",
     "solve_dapc",
     "setup_decomposed",
     "make_apply",
+    "qr_blocks",
+    "initial_from_factors",
     "solve_dgd",
     "solve_cgnr",
     "run_consensus",

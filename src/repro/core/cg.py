@@ -9,6 +9,10 @@ consensus average, but no QR/inverse setup. The trade: APC-family methods
 amortize an expensive setup into cheap iterations; CGNR has zero setup but
 squares the condition number (κ(AᵀA) = κ(A)²), so it needs far more epochs
 on ill-conditioned systems (measured in benchmarks/convergence).
+
+Multi-RHS: with bvecs (J, p, k) every reduction (α, β, ‖r‖²) is taken
+per-column, so the k Krylov iterations proceed independently inside one
+compiled program — identical per-column trajectories to k separate runs.
 """
 from __future__ import annotations
 
@@ -18,48 +22,58 @@ import jax.numpy as jnp
 from repro.core.partition import Partition
 
 
+def _coldot(a, b):
+    """⟨a, b⟩ over the solution axis: scalar for (n,), per-column for (n, k)."""
+    return jnp.sum(a * b, axis=0)
+
+
 def solve_cgnr(
     part: Partition,
     num_epochs: int = 100,
     x_ref: jnp.ndarray | None = None,
     tol: float = 0.0,
 ):
-    """CGNR end-to-end. Returns (x, history dict matching APC's)."""
+    """CGNR end-to-end. Returns (x, history dict matching APC's).
+
+    ``part.bvecs`` may carry a trailing (J, p, k) batch axis."""
     blocks, bvecs = part.blocks, part.bvecs
     n = blocks.shape[-1]
+    batched = bvecs.ndim == 3
 
     def matvec_normal(v):
         # Σ_j A_jᵀ (A_j v) — block-local compute + (would-be) psum
-        av = jnp.einsum("jpn,n->jp", blocks, v)
-        return jnp.einsum("jpn,jp->n", blocks, av)
+        av = jnp.einsum("jpn,n...->jp...", blocks, v)
+        return jnp.einsum("jpn,jp...->n...", blocks, av)
 
-    atb = jnp.einsum("jpn,jp->n", blocks, bvecs)
+    atb = jnp.einsum("jpn,jp...->n...", blocks, bvecs)
 
     def metrics(x):
         out = {}
         if x_ref is not None:
-            d = x - x_ref
-            out["mse"] = jnp.mean(d * d)
-        r = jnp.einsum("jpn,n->jp", blocks, x) - bvecs
-        out["residual_sq"] = jnp.sum(r * r)
+            ref = x_ref[..., None] if x.ndim > x_ref.ndim else x_ref
+            d = x - ref
+            out["mse"] = jnp.mean(d * d, axis=0)
+        r = jnp.einsum("jpn,n...->jp...", blocks, x) - bvecs
+        out["residual_sq"] = jnp.sum(r * r, axis=(0, 1))
         return out
 
-    x0 = jnp.zeros((n,), blocks.dtype)
+    shape = (n, bvecs.shape[-1]) if batched else (n,)
+    x0 = jnp.zeros(shape, blocks.dtype)
     r0 = atb - matvec_normal(x0)
 
     def step(carry, _):
         x, r, p, rs = carry
         ap = matvec_normal(p)
-        alpha = rs / jnp.maximum(jnp.vdot(p, ap), 1e-30)
+        alpha = rs / jnp.maximum(_coldot(p, ap), 1e-30)
         x = x + alpha * p
         r = r - alpha * ap
-        rs_new = jnp.vdot(r, r)
+        rs_new = _coldot(r, r)
         beta = rs_new / jnp.maximum(rs, 1e-30)
         p = r + beta * p
         return (x, r, p, rs_new), metrics(x)
 
     (x, _, _, _), hist = jax.lax.scan(
-        step, (x0, r0, r0, jnp.vdot(r0, r0)), None, length=num_epochs
+        step, (x0, r0, r0, _coldot(r0, r0)), None, length=num_epochs
     )
     hist["initial"] = metrics(x0)
     return x, hist

@@ -3,6 +3,13 @@
 Shared by classical APC and decomposed APC — the two differ only in how the
 per-block initial solutions and projectors are produced (Algorithm 1 steps
 2–3), not in the iteration itself (steps 5–8).
+
+Every function here is shape-polymorphic over a trailing RHS axis: state is
+``(J, n)`` for one right-hand side or ``(J, n, k)`` for a k-system batch.
+The batched form runs all k consensus iterations in ONE compiled program —
+the projector application becomes ``(J, p, n) × (J, n, k)`` einsums (MXU
+matmuls instead of k matvec dispatches), which is where the multi-RHS
+serving throughput comes from (benchmarks/multirhs.py).
 """
 from __future__ import annotations
 
@@ -12,15 +19,24 @@ import jax
 import jax.numpy as jnp
 
 
+def _match_rhs(bvecs: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast unbatched (J, p) bvecs against batched (…, k) state."""
+    if x.ndim > bvecs.ndim - 1:
+        return bvecs[..., None]
+    return bvecs
+
+
 def block_residual_sq(blocks: jnp.ndarray, bvecs: jnp.ndarray, x: jnp.ndarray):
-    """Global residual ||A x − b||² computed block-wise (no A reassembly)."""
-    r = jnp.einsum("jpn,n->jp", blocks, x) - bvecs
-    return jnp.sum(r * r)
+    """Global residual ||A x − b||² computed block-wise (no A reassembly).
+
+    Scalar for x (n,); per-system vector (k,) for a batched x (n, k)."""
+    r = jnp.einsum("jpn,n...->jp...", blocks, x) - _match_rhs(bvecs, x)
+    return jnp.sum(r * r, axis=(0, 1))
 
 
 def run_consensus(
-    x0s: jnp.ndarray,  # (J, n) per-block initial solutions
-    apply_fn: Callable[[jnp.ndarray], jnp.ndarray],  # (J, n) -> (J, n): P_j v_j
+    x0s: jnp.ndarray,  # (J, n) or (J, n, k) per-block initial solutions
+    apply_fn: Callable[[jnp.ndarray], jnp.ndarray],  # x0s-shaped: P_j v_j
     gamma: float,
     eta: float,
     num_epochs: int,
@@ -34,7 +50,8 @@ def run_consensus(
     """Paper eqs. (5)–(7). Returns (x̄_final, history dict).
 
     history carries per-epoch MSE to ``x_ref`` (paper Fig. 2 metric) and the
-    global residual when (blocks, bvecs) are supplied.
+    global residual when (blocks, bvecs) are supplied; with a batched
+    ``(J, n, k)`` input both metrics are per-system ``(k,)`` rows.
 
     ``compress="bf16_delta"`` halves the consensus all-reduce payload by
     communicating the DELTA mean(x)−x̄ in bf16 (eq. 7 rewritten as
@@ -51,22 +68,25 @@ def run_consensus(
     (EXPERIMENTS.md §Perf, solver)."""
     if xbar0 is None:
         xbar0 = jnp.mean(x0s, axis=0)  # eq. (5)
+    elif xbar0.ndim < x0s.ndim - 1:
+        xbar0 = jnp.broadcast_to(xbar0[..., None], x0s.shape[1:])
 
     def metrics(xbar):
         out = {}
         if x_ref is not None:
-            d = xbar - x_ref
-            out["mse"] = jnp.mean(d * d)
+            ref = x_ref[..., None] if xbar.ndim > x_ref.ndim else x_ref
+            d = xbar - ref
+            out["mse"] = jnp.mean(d * d, axis=0)
         if blocks is not None and bvecs is not None:
             out["residual_sq"] = block_residual_sq(blocks, bvecs, xbar)
         return out
 
     def step(carry, t):
         xs, xbar = carry
-        xs = xs + gamma * apply_fn(xbar[None, :] - xs)  # eq. (6), parallel in j
+        xs = xs + gamma * apply_fn(xbar[None] - xs)  # eq. (6), parallel in j
         do_avg = (t + 1) % avg_every == 0
         if compress == "bf16_delta":
-            delta = jnp.mean(xs - xbar[None, :], axis=0)  # the wire payload
+            delta = jnp.mean(xs - xbar[None], axis=0)  # the wire payload
             delta = delta.astype(jnp.bfloat16).astype(xbar.dtype)
             xbar_new = xbar + eta * delta  # eq. (7), delta form
         else:

@@ -6,6 +6,13 @@ Setup replaces every inversion with reduced QR + triangular substitution:
   eq. (4)  P_j = I − Q1ᵀQ1          (projector from the orthogonal factor)
 The consensus iteration (eqs. 5–7) is unchanged from classical APC.
 
+The setup is split along its data dependencies so the prepare/solve API can
+amortize it across right-hand sides:
+  * ``qr_blocks``            — eq. (1)/(4) factors (W_j, R_j); depends on A only.
+  * ``initial_from_factors`` — eq. (2–3) substitution; the only b-dependent
+    step, O(n²) per block, and batched over a trailing RHS axis.
+``setup_decomposed`` composes the two (the original single-shot path).
+
 Two execution profiles:
   * ``materialize_p=True``  — paper-faithful: dense P_j built per block.
   * ``materialize_p=False`` — beyond-paper: implicit P v = v − Wᵀ(W v)
@@ -24,51 +31,90 @@ from jax.scipy.linalg import solve_triangular
 from repro.core import consensus, projections
 from repro.core.partition import Partition
 
-
-def _initial_tall(block, bvec, use_kernels: bool):
-    """x_j(0) = R⁻¹ Q1ᵀ b via back-substitution (paper eqs. 2–3)."""
-    q1, r = projections.qr_factor(block, "tall")
-    y = q1.mT @ bvec
-    if use_kernels:
-        from repro.kernels.trisolve import ops as trisolve_ops
-
-        x0 = trisolve_ops.trisolve(r, y, lower=False)
-    else:
-        x0 = solve_triangular(r, y, lower=False)
-    return x0, q1  # W = Q1 (p, n)
+# observability for the prepare/solve split: how many times the QR setup
+# (the cost prepare() exists to amortize) actually ran in this process
+SETUP_STATS = {"qr_calls": 0}
 
 
-def _initial_wide(block, bvec, use_kernels: bool):
-    """Min-norm x_j(0) = Q R⁻ᵀ b via forward substitution (wide regime)."""
-    w, r = projections.qr_factor(block, "wide")  # W = Qᵀ (p, n); R (p, p)
-    if use_kernels:
-        from repro.kernels.trisolve import ops as trisolve_ops
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _qr_blocks_jit(blocks: jnp.ndarray, mode: str):
+    return jax.vmap(lambda a: projections.qr_factor(a, mode))(blocks)
 
-        z = trisolve_ops.trisolve(r.mT, bvec, lower=True)
-    else:
-        z = solve_triangular(r.mT, bvec, lower=True)
-    return w.mT @ z, w
+
+def qr_blocks(blocks: jnp.ndarray, mode: str):
+    """Paper eq. (1)/(4): per-block reduced QR. Returns (Ws (J,p,n), Rs).
+
+    ``Rs`` is (J, n, n) in the tall regime, (J, p, p) in the wide regime.
+    b-independent — this is the factorization ``prepare()`` caches.
+    """
+    SETUP_STATS["qr_calls"] += 1
+    return _qr_blocks_jit(blocks, mode)
+
+
+def _trisolve(r, y, lower: bool, use_kernels: bool):
+    """Triangular solve of (n, n) against (n,) or a batched (n, k)."""
+    if not use_kernels:
+        return solve_triangular(r, y, lower=lower)
+    from repro.kernels.trisolve import ops as trisolve_ops
+
+    if y.ndim == 1:
+        return trisolve_ops.trisolve(r, y, lower=lower)
+    return jax.vmap(
+        lambda col: trisolve_ops.trisolve(r, col, lower=lower),
+        in_axes=1, out_axes=1,
+    )(y)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "use_kernels"))
+def initial_from_factors(
+    Ws: jnp.ndarray,
+    Rs: jnp.ndarray,
+    bvecs: jnp.ndarray,  # (J, p) or (J, p, k)
+    mode: str,
+    use_kernels: bool = False,
+):
+    """Paper eqs. (2–3): x_j(0) by substitution on cached factors.
+
+    tall: x0 = R⁻¹ Q1ᵀ b (back-substitution); wide: min-norm x0 = Q R⁻ᵀ b
+    (forward substitution). Batched over a trailing RHS axis: bvecs
+    (J, p, k) → x0s (J, n, k).
+    """
+    if mode == "tall":
+        y = jnp.einsum("jpn,jp...->jn...", Ws, bvecs)  # Q1ᵀ b
+        return jax.vmap(lambda r, yy: _trisolve(r, yy, False, use_kernels))(Rs, y)
+    z = jax.vmap(lambda r, b: _trisolve(r.mT, b, True, use_kernels))(Rs, bvecs)
+    return jnp.einsum("jpn,jp...->jn...", Ws, z)  # Qᵀᵀ z = Q z
+
+
 def setup_decomposed(
     blocks: jnp.ndarray, bvecs: jnp.ndarray, mode: str, use_kernels: bool = False
 ):
     """Algorithm 1 steps 2–3, decomposed. Returns (x0s (J,n), Ws (J,p,n))."""
-    init = _initial_tall if mode == "tall" else _initial_wide
-    return jax.vmap(lambda a, b: init(a, b, use_kernels))(blocks, bvecs)
+    Ws, Rs = qr_blocks(blocks, mode)
+    x0s = initial_from_factors(Ws, Rs, bvecs, mode, use_kernels)
+    return x0s, Ws
 
 
 def make_apply(Ws: jnp.ndarray, materialize_p: bool, use_kernels: bool = False):
-    """Projector application for a (J, n) batch of consensus differences."""
+    """Projector application for a (J, n) or batched (J, n, k) consensus
+    difference — the batched form feeds the MXU with (p,n)×(n,k) matmuls."""
     if materialize_p:
         Ps = jax.vmap(projections.materialize)(Ws)  # paper-faithful dense P_j
-        return lambda v: jnp.einsum("jmn,jn->jm", Ps, v)
+        return lambda v: jnp.einsum("jmn,jn...->jm...", Ps, v)
     if use_kernels:
         from repro.kernels.project import ops as project_ops
 
-        return lambda v: jax.vmap(project_ops.project)(Ws, v)
-    return lambda v: v - jnp.einsum("jpn,jp->jn", Ws, jnp.einsum("jpn,jn->jp", Ws, v))
+        def project_one(w, v):  # v (n,) or (n, k)
+            if v.ndim == 1:
+                return project_ops.project(w, v)
+            return jax.vmap(
+                lambda col: project_ops.project(w, col), in_axes=1, out_axes=1
+            )(v)
+
+        return lambda v: jax.vmap(project_one)(Ws, v)
+    return lambda v: v - jnp.einsum(
+        "jpn,jp...->jn...", Ws, jnp.einsum("jpn,jn...->jp...", Ws, v)
+    )
 
 
 def solve_dapc(

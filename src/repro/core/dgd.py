@@ -4,6 +4,10 @@ Synchronous DGD on the global least-squares objective: each worker holds a row
 block, computes its local gradient A_jᵀ(A_j x_j − b_j), and mixes estimates by
 uniform consensus averaging (the paper's star/scheduler topology = complete
 mixing matrix).
+
+Multi-RHS: bvecs (J, p, k) runs the k descents in one compiled program; the
+step size depends only on λ_max(AᵀA), so it is shared across columns (and is
+the cacheable "setup" for the prepare/solve API).
 """
 from __future__ import annotations
 
@@ -34,30 +38,36 @@ def solve_dgd(
     num_epochs: int = 100,
     x_ref: jnp.ndarray | None = None,
 ):
-    """DGD end-to-end. Returns (x̄, history dict matching APC's)."""
+    """DGD end-to-end. Returns (x̄, history dict matching APC's).
+
+    ``part.bvecs`` may carry a trailing (J, p, k) batch axis."""
     blocks, bvecs = part.blocks, part.bvecs
     num_blocks, _, n = blocks.shape
     if lr is None:
         lam = estimate_lipschitz(blocks)
         lr = 1.0 / lam  # per-worker gradients; safe sync-DGD step
 
-    x0s = jnp.zeros((num_blocks, n), blocks.dtype)
+    shape = (num_blocks, n, bvecs.shape[-1]) if bvecs.ndim == 3 else (num_blocks, n)
+    x0s = jnp.zeros(shape, blocks.dtype)
 
     def metrics(xbar):
         out = {}
         if x_ref is not None:
-            d = xbar - x_ref
-            out["mse"] = jnp.mean(d * d)
-        r = jnp.einsum("jpn,n->jp", blocks, xbar) - bvecs
-        out["residual_sq"] = jnp.sum(r * r)
+            ref = x_ref[..., None] if xbar.ndim > x_ref.ndim else x_ref
+            d = xbar - ref
+            out["mse"] = jnp.mean(d * d, axis=0)
+        r = jnp.einsum("jpn,n...->jp...", blocks, xbar) - bvecs
+        out["residual_sq"] = jnp.sum(r * r, axis=(0, 1))
         return out
 
     def step(xs, _):
         xbar = jnp.mean(xs, axis=0)  # complete mixing
         grads = jnp.einsum(
-            "jpn,jp->jn", blocks, jnp.einsum("jpn,jn->jp", blocks, xs) - bvecs
+            "jpn,jp...->jn...",
+            blocks,
+            jnp.einsum("jpn,jn...->jp...", blocks, xs) - bvecs,
         )
-        xs = xbar[None, :] - lr * grads
+        xs = xbar[None] - lr * grads
         return xs, metrics(jnp.mean(xs, axis=0))
 
     xs, hist = jax.lax.scan(step, x0s, None, length=num_epochs)

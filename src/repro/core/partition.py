@@ -24,10 +24,12 @@ BlockMode = Literal["tall", "wide", "auto"]
 
 @dataclasses.dataclass(frozen=True)
 class Partition:
-    """Uniform row partition of a dense (or densified) system."""
+    """Uniform row partition of a dense (or densified) system.
+
+    ``bvecs`` holds one RHS (J, p) or a multi-RHS batch (J, p, k)."""
 
     blocks: jnp.ndarray  # (J, p, n)
-    bvecs: jnp.ndarray  # (J, p)
+    bvecs: jnp.ndarray  # (J, p) or (J, p, k)
     mode: str  # "tall" | "wide"
 
     @property
@@ -56,6 +58,39 @@ def resolve_mode(m: int, n: int, num_blocks: int, mode: BlockMode) -> str:
     return mode
 
 
+def partition_matrix(
+    A: np.ndarray,
+    num_blocks: int,
+    mode: BlockMode = "auto",
+    dtype=None,
+):
+    """Split A alone into J uniform row blocks; returns (blocks, mode, mixer).
+
+    The b-independent half of Algorithm 1 step 1 — the prepare/solve API
+    partitions A once here and re-applies the returned mixer to every
+    incoming right-hand side (``mixer.apply(b)``) so repeated solves never
+    touch A again.
+    """
+    from repro.sparse.matrix import make_row_mixer
+
+    A = np.asarray(A)
+    m, n = A.shape
+    resolved = resolve_mode(m, n, num_blocks, mode)
+    mixer = make_row_mixer(m, num_blocks)
+    blocks = mixer.apply(A)
+    if dtype is not None:
+        blocks = blocks.astype(dtype)
+    return jnp.asarray(blocks), resolved, mixer
+
+
+def block_rhs(mixer, b: np.ndarray, dtype=None) -> jnp.ndarray:
+    """Block a RHS (m,) or multi-RHS batch (m, k) with a cached mixer."""
+    bvecs = mixer.apply(np.asarray(b))
+    if dtype is not None:
+        bvecs = bvecs.astype(dtype)
+    return jnp.asarray(bvecs)
+
+
 def partition_system(
     A: np.ndarray,
     b: np.ndarray,
@@ -63,13 +98,10 @@ def partition_system(
     mode: BlockMode = "auto",
     dtype=None,
 ) -> Partition:
-    """Split (A, b) into J uniform dense row blocks ready for device transfer."""
-    from repro.sparse.matrix import block_rows as _block_rows
+    """Split (A, b) into J uniform dense row blocks ready for device transfer.
 
-    m, n = A.shape
-    resolved = resolve_mode(m, n, num_blocks, mode)
-    blocks, bvecs = _block_rows(np.asarray(A), np.asarray(b), num_blocks)
-    if dtype is not None:
-        blocks = blocks.astype(dtype)
-        bvecs = bvecs.astype(dtype)
-    return Partition(jnp.asarray(blocks), jnp.asarray(bvecs), resolved)
+    ``b`` may be one RHS (m,) or a batch (m, k) — the same mixing rows pad
+    both A and every column of b, keeping each system consistent.
+    """
+    blocks, resolved, mixer = partition_matrix(A, num_blocks, mode, dtype)
+    return Partition(blocks, block_rhs(mixer, b, dtype), resolved)

@@ -1,0 +1,259 @@
+"""Two-phase solver API: ``prepare(A) -> PreparedSolver``, then
+``prepared.solve(b | B)`` — setup amortized across right-hand sides.
+
+The paper's acceleration is precisely that setup (reduced QR + triangular
+substitution, Algorithm 1 eqs. 1–4) is cheap relative to classical
+inversion; serving many requests against the same system should not pay it
+per request at all. ``prepare`` runs Algorithm 1 steps 1 (partition) and
+the b-independent half of 2–3 (the QR factors W_j, R_j — or pseudoinverse +
+dense projector for classical APC, or the Lipschitz step for DGD) exactly
+once; every subsequent ``solve(b)`` performs only the O(n²) substitution
+plus the consensus iteration.
+
+``solve`` accepts one RHS ``(m,)`` or a column batch ``(m, k)``; the batched
+form iterates all k systems in one compiled program — the projector
+application becomes (J, p, n) × (J, n, k) einsums feeding the MXU — which is
+how request batching in the serving path gets its throughput
+(benchmarks/multirhs.py measures both effects).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apc, cg, consensus, dapc, dgd, projections
+from repro.core.partition import BlockMode, Partition, block_rhs, partition_matrix
+
+METHODS = ("apc", "dapc", "dgd", "cgnr")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    x: np.ndarray  # (n,) — or (n, k) for a batched solve
+    method: str
+    mode: str
+    num_blocks: int
+    num_epochs: int
+    history: dict[str, Any]  # per-epoch metrics (mse / residual_sq)
+    wall_seconds: float
+    gamma: float | None = None
+    eta: float | None = None
+    num_rhs: int = 1
+
+    def _last(self, h):
+        v = np.asarray(h[-1])
+        return float(v) if v.ndim == 0 else v
+
+    @property
+    def final_mse(self):
+        h = self.history.get("mse")
+        return self._last(h) if h is not None else None
+
+    @property
+    def final_residual(self):
+        return self._last(self.history["residual_sq"])
+
+
+@dataclasses.dataclass
+class PreparedSolver:
+    """Partition + per-block factors + jitted projector, cached.
+
+    Produced by ``prepare``; reusable (and read-only) across any number of
+    ``solve`` calls. ``num_solves`` counts them (observability for serving).
+    """
+
+    blocks: jnp.ndarray  # (J, p, n)
+    mode: str
+    mixer: Any  # RowMixer: blocks new b's with the same padding rows as A
+    method: str
+    gamma: float
+    eta: float
+    materialize_p: bool
+    use_kernels: bool
+    factors: tuple  # method-specific cached setup (see prepare())
+    projector: tuple  # ("dense"|"implicit"|"kernels", operand array) or ()
+    setup_seconds: float
+    num_solves: int = 0
+    # consensus programs jitted per (epochs, options) — repeat solves of the
+    # same request shape hit the XLA executable cache directly
+    _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def num_cols(self) -> int:
+        return self.blocks.shape[2]
+
+    def _consensus_program(self, num_epochs: int, kwargs: dict):
+        """Jitted substitution + consensus for the apc/dapc methods.
+
+        The eager ``lax.scan`` re-traces its body on every call — fine for a
+        one-shot solve, but it dominates per-request latency when serving.
+        Jitting the whole solve phase keys the trace on (epochs, options);
+        repeat requests of the same shape run straight from the executable
+        cache. γ/η enter as traced scalars (retuning them is free) and the
+        optional x_ref/xbar0 operands as pytrees (None = absent structure).
+        """
+        key = (num_epochs, tuple(sorted(kwargs.items())))
+        run = self._jit_cache.get(key)
+        if run is None:
+            proj_kind = self.projector[0]
+
+            # factor arrays enter as jit OPERANDS, not closure constants, so
+            # they are never baked into the executable (compile-time + memory)
+            def solve_phase(blocks, factors, proj, bvecs, gamma, eta, ref, warm):
+                if self.method == "dapc":
+                    Ws, Rs = factors
+                    x0s = dapc.initial_from_factors(
+                        Ws, Rs, bvecs, self.mode, self.use_kernels
+                    )
+                else:
+                    x0s = apc.initial_from_pinv(factors[0], bvecs)
+                if proj_kind == "dense":
+                    apply_fn = apc.make_apply(proj)
+                else:
+                    apply_fn = dapc.make_apply(
+                        proj, False, use_kernels=proj_kind == "kernels"
+                    )
+                return consensus.run_consensus(
+                    x0s,
+                    apply_fn,
+                    gamma,
+                    eta,
+                    num_epochs,
+                    x_ref=ref,
+                    blocks=blocks,
+                    bvecs=bvecs,
+                    xbar0=warm,
+                    **kwargs,
+                )
+
+            run = jax.jit(solve_phase)
+            self._jit_cache[key] = run
+        return run
+
+    def solve(
+        self,
+        b: np.ndarray,  # (m,) single RHS or (m, k) column batch
+        num_epochs: int = 100,
+        gamma: float | None = None,
+        eta: float | None = None,
+        x_ref: np.ndarray | None = None,
+        **kwargs,
+    ) -> SolveResult:
+        """Solve A x = b against the cached factors (Algorithm 1 steps 5–8
+        plus the per-b substitution); never re-partitions or re-factorizes.
+
+        kwargs are forwarded to the method (``avg_every``/``compress``/
+        ``xbar0`` for the consensus methods, ``tol`` for cgnr, ``lr`` for
+        dgd).
+        """
+        gamma = self.gamma if gamma is None else gamma
+        eta = self.eta if eta is None else eta
+        b = np.asarray(b)
+        batched = b.ndim == 2
+        bvecs = block_rhs(self.mixer, b, np.dtype(self.blocks.dtype))
+        ref = None if x_ref is None else jnp.asarray(x_ref, self.blocks.dtype)
+
+        t0 = time.perf_counter()
+        if self.method in ("apc", "dapc"):
+            xbar0 = kwargs.pop("xbar0", None)
+            run = self._consensus_program(num_epochs, kwargs)
+            x, hist = run(
+                self.blocks, self.factors, self.projector[1], bvecs,
+                jnp.asarray(gamma), jnp.asarray(eta), ref, xbar0,
+            )
+        elif self.method == "cgnr":
+            part = Partition(self.blocks, bvecs, self.mode)
+            x, hist = cg.solve_cgnr(part, num_epochs=num_epochs, x_ref=ref, **kwargs)
+        else:  # dgd
+            part = Partition(self.blocks, bvecs, self.mode)
+            kwargs.setdefault("lr", self.factors[0])
+            x, hist = dgd.solve_dgd(part, num_epochs=num_epochs, x_ref=ref, **kwargs)
+        x = jax.block_until_ready(x)
+        wall = time.perf_counter() - t0
+        self.num_solves += 1
+
+        hist = jax.tree.map(np.asarray, hist)
+        return SolveResult(
+            x=np.asarray(x),
+            method=self.method,
+            mode=self.mode,
+            num_blocks=self.num_blocks,
+            num_epochs=num_epochs,
+            history=hist,
+            wall_seconds=wall,
+            gamma=gamma if self.method in ("apc", "dapc") else None,
+            eta=eta if self.method in ("apc", "dapc") else None,
+            num_rhs=b.shape[1] if batched else 1,
+        )
+
+
+def prepare(
+    A: np.ndarray,
+    method: str = "dapc",
+    num_blocks: int = 8,
+    mode: BlockMode = "auto",
+    dtype=None,
+    gamma: float = 1.0,
+    eta: float = 0.9,
+    materialize_p: bool = True,
+    use_kernels: bool = False,
+) -> PreparedSolver:
+    """Algorithm 1 steps 1–4, b-independent: partition A, factorize every
+    block, build the jitted projector. Returns the reusable PreparedSolver.
+
+    Cached per method:
+      * dapc — (W_j, R_j) reduced-QR factors (paper eqs. 1/4);
+      * apc  — (A_j⁺, P_j) pseudoinverse + dense projector (the classical
+               setup the paper's decomposition replaces);
+      * dgd  — the 1/λ_max(AᵀA) step size (power iteration);
+      * cgnr — nothing beyond the partition (zero-setup baseline).
+    """
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}")
+    t0 = time.perf_counter()
+    blocks, resolved, mixer = partition_matrix(A, num_blocks, mode, dtype)
+
+    factors: tuple = ()
+    projector: tuple = ()
+    if method == "dapc":
+        Ws, Rs = dapc.qr_blocks(blocks, resolved)
+        factors = (Ws, Rs)
+        if materialize_p:
+            # paper-faithful dense P_j, built ONCE here (not per solve)
+            Ps = jax.vmap(projections.materialize)(Ws)
+            projector = ("dense", Ps)
+        elif use_kernels:
+            projector = ("kernels", Ws)
+        else:
+            projector = ("implicit", Ws)
+    elif method == "apc":
+        pinvs, Ps = apc.classical_factors(blocks, resolved)
+        factors = (pinvs, Ps)
+        projector = ("dense", Ps)
+    elif method == "dgd":
+        factors = (float(dgd.estimate_lipschitz(blocks)) ** -1,)
+    jax.block_until_ready(blocks if not factors else factors[0])
+    setup_seconds = time.perf_counter() - t0
+
+    return PreparedSolver(
+        blocks=blocks,
+        mode=resolved,
+        mixer=mixer,
+        method=method,
+        gamma=gamma,
+        eta=eta,
+        materialize_p=materialize_p,
+        use_kernels=use_kernels,
+        factors=factors,
+        projector=projector,
+        setup_seconds=setup_seconds,
+    )

@@ -1,90 +1,60 @@
-"""Unified public solver API: ``solve(A, b, method=...)``.
+"""Unified public solver API: ``prepare(A).solve(b)`` and ``solve(A, b)``.
 
 This is the framework entry point for the paper's technique — examples, the
-linear-probe integration, and the benchmarks all go through here.
+linear-probe integration, the serving path, and the benchmarks all go
+through here.  ``solve`` is a thin one-shot wrapper over the two-phase
+prepare/solve split (repro.core.prepared); callers that solve the same
+system for many right-hand sides should hold the ``PreparedSolver`` and
+skip the per-call setup entirely.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.prepared import (  # noqa: F401  (re-exported API)
+    METHODS,
+    PreparedSolver,
+    SolveResult,
+    prepare,
+)
+from repro.core.partition import BlockMode
 
-from repro.core import apc, cg, dapc, dgd
-from repro.core.partition import BlockMode, partition_system
-
-METHODS = ("apc", "dapc", "dgd", "cgnr")
-
-
-@dataclasses.dataclass(frozen=True)
-class SolveResult:
-    x: np.ndarray
-    method: str
-    mode: str
-    num_blocks: int
-    num_epochs: int
-    history: dict[str, Any]  # per-epoch metrics (mse / residual_sq)
-    wall_seconds: float
-    gamma: float | None = None
-    eta: float | None = None
-
-    @property
-    def final_mse(self) -> float | None:
-        h = self.history.get("mse")
-        return float(h[-1]) if h is not None else None
-
-    @property
-    def final_residual(self) -> float:
-        return float(self.history["residual_sq"][-1])
+# kwargs consumed at prepare() time; everything else forwards to the method
+_PREPARE_KWARGS = ("materialize_p", "use_kernels")
 
 
 def solve(
-    A: np.ndarray,
-    b: np.ndarray,
+    A,
+    b,
     method: str = "dapc",
     num_blocks: int = 8,
     num_epochs: int = 100,
     gamma: float = 1.0,
     eta: float = 0.9,
     mode: BlockMode = "auto",
-    x_ref: np.ndarray | None = None,
+    x_ref=None,
     dtype=None,
     **kwargs,
 ) -> SolveResult:
     """Solve the (consistent, overdetermined) system A x = b distributively.
 
+    One-shot compatibility wrapper: runs ``prepare`` (Algorithm 1 steps 1–4)
+    and a single ``solve`` (steps 5–8) back to back, so its wall_seconds
+    includes the setup that the prepare/solve split amortizes away.
+
+    ``b`` may be one RHS (m,) or a column batch (m, k) — the batch solves
+    all k systems in one compiled program.
+
     kwargs are forwarded to the method (e.g. ``materialize_p=False`` /
     ``use_kernels=True`` for dapc, ``lr=`` for dgd).
     """
-    if method not in METHODS:
-        raise ValueError(f"method must be one of {METHODS}")
-    part = partition_system(A, b, num_blocks, mode=mode, dtype=dtype)
-    ref = None if x_ref is None else jnp.asarray(x_ref, part.blocks.dtype)
-
-    t0 = time.perf_counter()
-    if method == "apc":
-        x, hist = apc.solve_apc(part, gamma, eta, num_epochs, x_ref=ref)
-    elif method == "dapc":
-        x, hist = dapc.solve_dapc(part, gamma, eta, num_epochs, x_ref=ref, **kwargs)
-    elif method == "cgnr":
-        x, hist = cg.solve_cgnr(part, num_epochs=num_epochs, x_ref=ref, **kwargs)
-    else:
-        x, hist = dgd.solve_dgd(part, num_epochs=num_epochs, x_ref=ref, **kwargs)
-    x = jax.block_until_ready(x)
-    wall = time.perf_counter() - t0
-
-    hist = jax.tree.map(np.asarray, hist)
-    return SolveResult(
-        x=np.asarray(x),
-        method=method,
-        mode=part.mode,
-        num_blocks=num_blocks,
-        num_epochs=num_epochs,
-        history=hist,
-        wall_seconds=wall,
-        gamma=gamma if method in ("apc", "dapc") else None,
-        eta=eta if method in ("apc", "dapc") else None,
+    prep_kw = {k: kwargs.pop(k) for k in _PREPARE_KWARGS if k in kwargs}
+    prep = prepare(
+        A, method=method, num_blocks=num_blocks, mode=mode, dtype=dtype,
+        gamma=gamma, eta=eta, **prep_kw,
+    )
+    res = prep.solve(b, num_epochs=num_epochs, x_ref=x_ref, **kwargs)
+    # preserve the historical contract: one-shot wall time covers setup too
+    return dataclasses.replace(
+        res, wall_seconds=res.wall_seconds + prep.setup_seconds
     )

@@ -21,11 +21,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
 
 SHARDING_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
@@ -151,7 +153,7 @@ def maybe_shard_activations(
     remat-saved per-layer activations 1/model_ways the size — the difference
     between fitting and not fitting HBM for the big train cells (DESIGN.md
     §7, EXPERIMENTS.md §Perf)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names or getattr(x, "ndim", 0) != 3:
         return x
     names = set(mesh.axis_names)
@@ -174,7 +176,7 @@ def constrain(x, axes: tuple[str | None, ...], rules=None):
     Used inside blocks whose internal reshapes defeat SPMD propagation —
     e.g. the SSD (B,nc,L,H,P) chunk tensors must keep H on the ``model``
     axis or they silently replicate 16× (EXPERIMENTS.md §Perf, zamba2)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names or getattr(x, "ndim", 0) != len(axes):
         return x
     spec = logical_to_spec(axes, x.shape, mesh, rules)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCHS, get_config
 from repro.configs.shapes import SHAPES, applicable
 from repro.distributed.sharding import logical_to_spec, tree_pspecs, shape_structs
@@ -216,23 +217,22 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, artifacts_dir: str,
 
     if mesh_override:
         d, m = mesh_override
-        from jax.sharding import AxisType
         shape_t = (2, d, m) if multi_pod else (d, m)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-        mesh = jax.make_mesh(shape_t, axes, axis_types=(AxisType.Auto,) * len(axes))
+        mesh = compat.make_mesh(shape_t, axes)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.perf_counter()
     fn, args, shardings, donate = build_cell(cfg, shape, mesh)
     jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
-    with jax.sharding.set_mesh(mesh):  # activates SP activation constraints
+    with compat.use_mesh(mesh):  # activates SP activation constraints
         lowered = jitted.lower(*args)
         t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
         t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     num_devices = mesh.devices.size

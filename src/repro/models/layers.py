@@ -13,7 +13,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import ParamSpec, constrain
+from repro.distributed.sharding import ParamSpec
 
 
 # ---------------------------------------------------------------------------

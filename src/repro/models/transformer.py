@@ -14,7 +14,6 @@ Activation checkpointing: each scanned period body is wrapped in
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 
 import jax

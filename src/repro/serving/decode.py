@@ -2,6 +2,12 @@
 
 ``make_serve_step`` is the function the dry-run lowers for the decode cells:
 one new token for the whole batch against a KV cache of ``max_seq``.
+
+Serving follows the same prepare/solve split as the solver stack
+(repro.core.prepared): the jitted step for a config is built once and cached
+(``prepared_serve_step``), so back-to-back ``generate`` calls — the serving
+loop's many-requests-per-model shape — pay tracing/compilation once instead
+of per request.
 """
 from __future__ import annotations
 
@@ -26,6 +32,15 @@ def make_serve_step(cfg):
     return serve_step
 
 
+@functools.lru_cache(maxsize=16)
+def prepared_serve_step(cfg):
+    """The jitted serve_step for ``cfg``, built once per config.
+
+    Configs are frozen dataclasses, so they hash as cache keys; XLA
+    compilation caches per (shape, dtype) under the jit as usual."""
+    return jax.jit(make_serve_step(cfg))
+
+
 def generate(
     params,
     cfg,
@@ -41,7 +56,7 @@ def generate(
     ``use_prefill=False`` falls back to token-by-token prompt processing."""
     b, plen = prompts.shape
     max_seq = max_seq or (plen + max_new)
-    step = jax.jit(make_serve_step(cfg))
+    step = prepared_serve_step(cfg)
     out = []
     if use_prefill:
         logits, caches = transformer.prefill(params, prompts, cfg, max_seq, aux=aux)

@@ -1,4 +1,10 @@
-from repro.sparse.matrix import COOMatrix, block_rows, matrix_stats
+from repro.sparse.matrix import (
+    COOMatrix,
+    RowMixer,
+    block_rows,
+    make_row_mixer,
+    matrix_stats,
+)
 from repro.sparse.io import (
     generate_schenk_like,
     augment_system,
@@ -9,7 +15,9 @@ from repro.sparse.io import (
 
 __all__ = [
     "COOMatrix",
+    "RowMixer",
     "block_rows",
+    "make_row_mixer",
     "matrix_stats",
     "generate_schenk_like",
     "augment_system",

@@ -62,6 +62,42 @@ class COOMatrix:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class RowMixer:
+    """The deterministic row-padding map of ``block_rows``, reified.
+
+    Splitting it out lets the prepare/solve API block NEW right-hand sides
+    against an already-partitioned matrix: the same mixing rows ``g`` that
+    padded A must pad every b (paper eq. 8 consistency), so the mixer is
+    cached alongside the QR factors.
+    """
+
+    m: int  # original row count
+    num_blocks: int
+    p: int  # uniform block height (ceil(m / J))
+    g: np.ndarray | None  # (pad, m) mixing rows; None when m divides evenly
+
+    def apply(self, v: np.ndarray) -> np.ndarray:
+        """Pad + reshape rows of ``v`` (m, ...) into blocks (J, p, ...)."""
+        v = np.asarray(v)
+        if v.shape[0] != self.m:
+            raise ValueError(f"expected {self.m} rows, got {v.shape[0]}")
+        if self.g is not None:
+            v = np.concatenate([v, self.g.astype(v.dtype) @ v], axis=0)
+        return v.reshape(self.num_blocks, self.p, *v.shape[1:])
+
+
+def make_row_mixer(m: int, num_blocks: int) -> RowMixer:
+    """Mixer for an m-row system split J ways (seeded: identical every call)."""
+    p = -(-m // num_blocks)  # ceil
+    pad = p * num_blocks - m
+    g = None
+    if pad:
+        rng = np.random.default_rng(0)
+        g = rng.standard_normal((pad, m)) / np.sqrt(m)
+    return RowMixer(m=m, num_blocks=num_blocks, p=p, g=g)
+
+
 def block_rows(a: COOMatrix | np.ndarray, b: np.ndarray, num_blocks: int):
     """Uniform row partition into ``num_blocks`` dense blocks (J, p, n) + (J, p).
 
@@ -69,20 +105,12 @@ def block_rows(a: COOMatrix | np.ndarray, b: np.ndarray, num_blocks: int):
     block; for SPMD we need uniform blocks, so the remainder rows are re-mixed
     into extra *consistent* rows (random combinations of existing equations,
     exactly the paper's eq. 8 augmentation) to pad the final block.
+
+    ``b`` may be a single RHS (m,) or a multi-RHS batch (m, k).
     """
-    m = a.shape[0]
-    n = a.shape[1]
-    p = -(-m // num_blocks)  # ceil
-    pad = p * num_blocks - m
     dense = a.to_dense() if isinstance(a, COOMatrix) else np.asarray(a)
-    if pad:
-        rng = np.random.default_rng(0)
-        g = rng.standard_normal((pad, m)) / np.sqrt(m)
-        dense = np.concatenate([dense, g @ dense], axis=0)
-        b = np.concatenate([b, g @ b], axis=0)
-    blocks = dense.reshape(num_blocks, p, n)
-    bvecs = b.reshape(num_blocks, p)
-    return blocks, bvecs
+    mixer = make_row_mixer(dense.shape[0], num_blocks)
+    return mixer.apply(dense), mixer.apply(b)
 
 
 def matrix_stats(a: COOMatrix) -> dict:

@@ -1,0 +1,90 @@
+"""Property-testing front-end: hypothesis when installed, else a
+deterministic seeded fallback.
+
+The property suites (tests/test_properties.py, tests/test_model_properties.py)
+import ``given / settings / st`` from here instead of from hypothesis
+directly.  With hypothesis installed (the CI lint/test runners install it)
+the real library is used — tests/conftest.py loads a ``derandomize`` profile
+so runs are reproducible.  Without it (minimal containers) the fallback
+below draws ``max_examples`` examples from a per-test seeded generator:
+same strategy surface, fully deterministic, no dependency.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        """A draw function over a seeded numpy Generator."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: "np.random.Generator"):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def tuples(*strats: _Strategy) -> _Strategy:
+            return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+    st = _Strategies()
+
+    def given(*strategies: _Strategy):
+        def decorate(fn):
+            def wrapper():
+                # seed from the test's qualified name: stable across runs
+                # and machines, distinct across tests
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode())
+                )
+                for _ in range(getattr(wrapper, "_max_examples", 10)):
+                    example = [s.example(rng) for s in strategies]
+                    fn(*example)
+
+            # zero-arg signature on purpose: pytest must not read the wrapped
+            # test's generated-argument names as fixture requests
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = 10
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples: int = 10, **_kw):
+        """Accepts (a subset of) hypothesis settings; only max_examples has
+        an effect on the fallback runner."""
+
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -7,8 +7,6 @@ the same NamedShardings), giving ZeRO-style distribution for free.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

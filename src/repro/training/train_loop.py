@@ -9,9 +9,8 @@ tests), and optional int8+error-feedback gradient compression.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,14 @@
+"""Deterministic property-test runs.
+
+When hypothesis is installed, load a derandomized profile so every CI run
+replays the same examples (no flaky shrink sessions, reproducible failures).
+Without hypothesis, repro.testing's fallback runner is seeded per-test and
+is deterministic by construction.
+"""
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile("ci", derandomize=True, deadline=None)
+    settings.load_profile("ci")

@@ -1,7 +1,6 @@
 """Per-arch smoke tests: reduced config of the same family, one forward /
 train step on CPU, asserting output shapes and no NaNs. The FULL configs are
 exercised only via the dry-run (launch/dryrun.py, ShapeDtypeStructs)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -169,8 +169,10 @@ def test_avg_every_per_collective_equivalence(wide_problem, wide_partition):
                             materialize_p=False)
     _, h4 = dapc.solve_dapc(wide_partition, 1.0, 0.9, 200, x_ref=ref,
                             materialize_p=False, avg_every=4)
+    # both runs converge to the f64 noise floor (~1e-12); compare there with
+    # an atol matching that floor so ULP-level wobble can't flip the test
     np.testing.assert_allclose(
-        float(h4["mse"][-1]), float(h1["mse"][-1]), rtol=0.05
+        float(h4["mse"][-1]), float(h1["mse"][-1]), rtol=0.05, atol=1e-12
     )
 
 

@@ -1,18 +1,17 @@
 """Dry-run cell construction tests (no 512-device init needed: build_cell is
 pure; trees/shardings must be consistent and eval_shape must succeed)."""
 import jax
-import jax.numpy as jnp
 import pytest
-from jax.sharding import AxisType, NamedSharding
+from jax.sharding import NamedSharding
 
+from repro import compat
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES, applicable
 from repro.launch import dryrun
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ["granite-3-2b", "deepseek-v2-236b",

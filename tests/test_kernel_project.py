@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.project import ops
-from repro.kernels.project.ref import consensus_update_ref, project_ref
+from repro.kernels.project.ref import consensus_update_ref
 
 
 def _mk(p, n, dtype, seed=0):

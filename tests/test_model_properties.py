@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from repro.testing import given, settings, st
 
 from repro.configs import get_config, reduced_config
 from repro.models import layers, transformer

@@ -1,0 +1,94 @@
+"""Prepare/solve split + batched multi-RHS contract tests (ISSUE 1 tentpole).
+
+(a) prepare-once + repeated solves must be BITWISE identical to fresh
+    one-shot solves (same compiled programs, same operands);
+(b) a batched (m, k) solve must match the per-column sequential solves;
+(c) the QR setup must run exactly once per prepare(), never per solve.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dapc, prepare, solve
+from repro.sparse import make_problem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(n=96, m=384, seed=3, dtype=np.float32)
+
+
+@pytest.fixture(scope="module")
+def rhs_batch(problem):
+    rng = np.random.default_rng(17)
+    xs = rng.standard_normal((96, 6)).astype(np.float32)
+    return problem.A @ xs, xs
+
+
+def test_prepared_matches_fresh_solve_bitwise(problem):
+    prep = prepare(problem.A, num_blocks=8, materialize_p=False)
+    r1 = prep.solve(problem.b, num_epochs=60, x_ref=problem.x_true)
+    r2 = prep.solve(problem.b, num_epochs=60, x_ref=problem.x_true)
+    f1 = solve(problem.A, problem.b, num_blocks=8, num_epochs=60,
+               x_ref=problem.x_true, materialize_p=False)
+    f2 = solve(problem.A, problem.b, num_blocks=8, num_epochs=60,
+               x_ref=problem.x_true, materialize_p=False)
+    np.testing.assert_array_equal(r1.x, r2.x)
+    np.testing.assert_array_equal(r1.x, f1.x)
+    np.testing.assert_array_equal(f1.x, f2.x)
+    np.testing.assert_array_equal(
+        np.asarray(r1.history["mse"]), np.asarray(f1.history["mse"])
+    )
+    assert prep.num_solves == 2
+
+
+@pytest.mark.parametrize("method", ["dapc", "apc", "cgnr", "dgd"])
+def test_batched_matches_per_column(problem, rhs_batch, method):
+    B, xs = rhs_batch
+    prep = prepare(problem.A, method=method, num_blocks=8)
+    batched = prep.solve(B, num_epochs=120)
+    assert batched.x.shape == xs.shape
+    assert batched.num_rhs == xs.shape[1]
+    cols = np.stack(
+        [prep.solve(B[:, i], num_epochs=120).x for i in range(xs.shape[1])],
+        axis=1,
+    )
+    scale = np.abs(cols).max() + 1e-30
+    assert float(np.abs(batched.x - cols).max() / scale) <= 1e-5
+    # per-epoch history rows are per-system in the batched form
+    assert np.asarray(batched.history["residual_sq"]).shape == (120, xs.shape[1])
+
+
+def test_batched_consensus_recovers_truth(problem, rhs_batch):
+    B, xs = rhs_batch
+    prep = prepare(problem.A, num_blocks=8, materialize_p=False)
+    res = prep.solve(B, num_epochs=200, x_ref=xs)
+    assert float(np.max(np.asarray(res.final_mse))) < 1e-9
+    np.testing.assert_allclose(res.x, xs, atol=1e-4)
+
+
+def test_setup_runs_once_per_prepare(problem):
+    before = dapc.SETUP_STATS["qr_calls"]
+    prep = prepare(problem.A, num_blocks=8, materialize_p=False)
+    assert dapc.SETUP_STATS["qr_calls"] == before + 1
+    for _ in range(3):
+        prep.solve(problem.b, num_epochs=10)
+    assert dapc.SETUP_STATS["qr_calls"] == before + 1  # cached, not recomputed
+    # while every fresh one-shot solve pays it again
+    solve(problem.A, problem.b, num_blocks=8, num_epochs=10)
+    assert dapc.SETUP_STATS["qr_calls"] == before + 2
+
+
+def test_batched_through_one_shot_wrapper(problem, rhs_batch):
+    B, xs = rhs_batch
+    res = solve(problem.A, B, num_blocks=8, num_epochs=200)
+    assert res.x.shape == xs.shape
+    np.testing.assert_allclose(res.x, xs, atol=1e-4)
+
+
+def test_prepared_solver_reports_setup_and_solves(problem):
+    prep = prepare(problem.A, num_blocks=8)
+    assert prep.setup_seconds > 0.0
+    assert prep.num_solves == 0
+    prep.solve(problem.b, num_epochs=5)
+    assert prep.num_solves == 1
+    assert prep.num_blocks == 8 and prep.num_cols == 96

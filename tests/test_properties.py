@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from repro.testing import given, settings, st
 
 from repro.core import dapc, projections
 from repro.core.consensus import run_consensus

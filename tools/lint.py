@@ -1,0 +1,89 @@
+"""Repo lint entry point: ruff when installed, built-in fallback otherwise.
+
+The CI lint job installs ruff and this script execs ``ruff check`` (config
+in pyproject.toml).  On minimal containers without ruff (and without
+network to install it), the fallback covers a subset of those rules —
+syntax errors and unused imports — via a small AST pass over every
+tracked python file; undefined-name checks (F82) need real ruff.
+
+    python tools/lint.py
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import shutil
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+TARGETS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def run_ruff() -> int:
+    return subprocess.run(
+        ["ruff", "check", *TARGETS], cwd=ROOT
+    ).returncode
+
+
+def _unused_imports(tree: ast.AST, source: str) -> list[tuple[int, str]]:
+    imported: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                imported[(a.asname or a.name).split(".")[0]] = node.lineno
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name != "*":
+                    imported[a.asname or a.name] = node.lineno
+    used = {
+        n.id for n in ast.walk(tree) if isinstance(n, ast.Name)
+    } | {
+        n.attr for n in ast.walk(tree) if isinstance(n, ast.Attribute)
+    }
+    out = []
+    for name, lineno in imported.items():
+        # `# noqa` opt-outs and __all__ re-exports stay
+        line = source.splitlines()[lineno - 1]
+        if "noqa" in line or f'"{name}"' in source or f"'{name}'" in source:
+            continue
+        if name not in used:
+            out.append((lineno, name))
+    return out
+
+
+def run_fallback() -> int:
+    failures = 0
+    for target in TARGETS:
+        for path in sorted((ROOT / target).rglob("*.py")):
+            rel = path.relative_to(ROOT)
+            if path.name == "__init__.py":  # re-export surface
+                continue
+            source = path.read_text()
+            try:
+                tree = ast.parse(source, filename=str(rel))
+            except SyntaxError as e:
+                print(f"{rel}:{e.lineno}: syntax error: {e.msg}")
+                failures += 1
+                continue
+            for lineno, name in _unused_imports(tree, source):
+                print(f"{rel}:{lineno}: unused import: {name}")
+                failures += 1
+    if failures:
+        print(f"fallback lint: {failures} finding(s)")
+    else:
+        print("fallback lint: clean")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    if shutil.which("ruff"):
+        return run_ruff()
+    print("ruff not installed; running built-in fallback lint", file=sys.stderr)
+    return run_fallback()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
