@@ -1,0 +1,48 @@
+"""BENCH_*.json emission — one machine-readable record per benchmark section.
+
+CI's bench-smoke uploads these as workflow artifacts, so the perf trajectory
+(throughput, latency percentiles, speedup gates) is recorded per commit and
+diffable across the history, not just visible in scrollback.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+
+
+def _jsonable(value):
+    """Coerce benchmark payloads (numpy scalars/arrays, nested dicts) to JSON."""
+    if isinstance(value, dict):
+        return {str(k): _jsonable(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_jsonable(v) for v in value]
+    if hasattr(value, "tolist"):  # numpy scalar or array
+        return value.tolist()
+    if isinstance(value, (str, int, float, bool)) or value is None:
+        return value
+    return str(value)
+
+
+def write_record(
+    section: str,
+    rows: list[dict],
+    checks: dict | None = None,
+    quick: bool | None = None,
+    out_dir: str = ".",
+) -> pathlib.Path:
+    """Write ``BENCH_<section>.json`` and return its path."""
+    import jax
+
+    record = {
+        "section": section,
+        "quick": quick,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "rows": _jsonable(rows),
+        "checks": _jsonable(checks or {}),
+    }
+    path = pathlib.Path(out_dir) / f"BENCH_{section}.json"
+    path.write_text(json.dumps(record, indent=2) + "\n", encoding="utf-8")
+    return path

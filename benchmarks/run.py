@@ -1,8 +1,11 @@
-"""Benchmark harness — one section per paper table/figure + roofline.
+"""Benchmark harness — one section per paper table/figure + roofline + serving.
 
-Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks problem sizes.
-Exits nonzero when any section raises, so the CI bench-smoke job fails
-loudly on kernel regressions instead of printing an ERROR row and passing.
+Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
+``BENCH_<section>.json`` per executed section (uploaded by CI's bench-smoke
+as a workflow artifact — the per-commit perf record). ``--quick`` shrinks
+problem sizes. ``--only`` takes a comma-separated subset of sections. Exits
+nonzero when any section raises, so the CI bench-smoke job fails loudly on
+kernel regressions instead of printing an ERROR row and passing.
 """
 from __future__ import annotations
 
@@ -21,29 +24,50 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
-        "--only", default=None,
-        choices=["convergence", "speedup", "kernels", "roofline", "multirhs"],
+        "--only", default=None, metavar="SECTION[,SECTION...]",
+        help="run only these sections (comma-separated)",
     )
     args = ap.parse_args()
 
-    from benchmarks import convergence, kernels, multirhs, roofline, speedup
+    from benchmarks import (
+        convergence,
+        kernels,
+        multirhs,
+        record,
+        roofline,
+        serving_queue,
+        speedup,
+    )
 
+    # every section returns rows, or (rows, checks) when it has gate metrics
+    # (convergence's second element is raw per-epoch curves, not checks)
     sections = {
         "convergence": lambda: convergence.run(quick=args.quick)[0],
         "speedup": lambda: speedup.run(quick=args.quick),
         "kernels": lambda: kernels.run(quick=args.quick),
         "roofline": lambda: roofline.run(quick=args.quick),
-        "multirhs": lambda: multirhs.run(quick=args.quick)[0],
+        "multirhs": lambda: multirhs.run(quick=args.quick),
+        "serving": lambda: serving_queue.run(quick=args.quick),
     }
     if args.only:
-        sections = {args.only: sections[args.only]}
+        names = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in names if s not in sections]
+        if unknown:
+            ap.error(
+                f"unknown section(s): {', '.join(unknown)} "
+                f"(valid: {', '.join(sections)})"
+            )
+        sections = {name: sections[name] for name in names}
 
     failed = []
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         try:
-            for row in fn():
+            out = fn()
+            rows, checks = out if isinstance(out, tuple) else (out, {})
+            for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+            record.write_record(name, rows, checks, quick=args.quick)
         except Exception as e:  # report the failure, keep later sections running
             failed.append(name)
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")

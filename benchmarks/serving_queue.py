@@ -1,0 +1,169 @@
+"""Serving-queue benchmark: coalesced dispatch vs per-request solves.
+
+Three ways to serve k single-RHS requests that all target one prepared
+system (setup is amortized in every case — this measures the QUEUE's
+contribution on top of the prepare/solve split):
+
+  * sequential — k × ``prep.solve(b_i)``: one compiled program per request,
+                 the baseline a client-side loop would get;
+  * coalesced  — the ``SolveServer`` micro-batcher: a burst of k concurrent
+                 requests coalesced into (m, max_batch) column batches,
+                 per-request latency measured at the futures;
+  * poisson    — the same server under a Poisson arrival trace (requests/s
+                 chosen so the queue actually batches), the uneven-arrival
+                 shape the queue exists for.
+
+Acceptance gate (ISSUE 2): coalesced throughput >= 3x sequential at
+max_batch=8 on CPU. Emits ``BENCH_serving.json``. Standalone:
+
+    PYTHONPATH=src python benchmarks/serving_queue.py --quick
+"""
+from __future__ import annotations
+
+import asyncio
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:  # standalone `python benchmarks/serving_queue.py`
+        sys.path.insert(0, _p)
+
+from repro.core import prepare  # noqa: E402
+from repro.serving.queue import ServerStats, SolveServer, replay_trace  # noqa: E402
+from repro.sparse import make_problem  # noqa: E402
+
+MAX_BATCH = 8
+
+
+def _percentiles(results):
+    lat = np.array([r.queue_ms + r.solve_ms for r in results])
+    return {
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+    }
+
+
+def run(quick: bool = False, num_requests: int = 64):
+    n, m, blocks, epochs = (256, 1024, 8, 40) if quick else (512, 2048, 8, 60)
+    prob = make_problem(n=n, m=m, seed=7, dtype=np.float32)
+    rng = np.random.default_rng(23)
+    xs = rng.standard_normal((n, num_requests)).astype(np.float32)
+    rhs = prob.A @ xs
+
+    kw = dict(num_blocks=blocks, materialize_p=False)
+
+    # --- sequential baseline: amortized setup, per-request dispatch --------
+    prep = prepare(prob.A, **kw)
+    prep.solve(rhs[:, 0], num_epochs=epochs)  # warm the (m,) program
+    t0 = time.perf_counter()
+    seq = [prep.solve(rhs[:, i], num_epochs=epochs) for i in range(num_requests)]
+    t_seq = time.perf_counter() - t0
+
+    # --- coalesced: the async micro-batching server ------------------------
+    async def serve(gaps):
+        async with SolveServer(
+            max_batch=MAX_BATCH, max_wait_ms=5.0, num_epochs=epochs,
+            tol=1e-3, prepare_kwargs=kw,
+        ) as server:
+            fp = server.register(prob.A)
+            await server.submit(fp, rhs[:, 0])  # warm the (m, MAX_BATCH) program
+            server.stats = ServerStats()  # don't count the warm-up in the trace
+            t0 = time.perf_counter()
+            results = await replay_trace(server, fp, rhs, gaps)
+            wall = time.perf_counter() - t0
+            return server.stats, results, wall
+
+    burst_stats, burst, t_coal = asyncio.run(serve(np.zeros(num_requests)))
+
+    # --- poisson trace: arrivals at ~2x the sequential service rate --------
+    rate = 2.0 * num_requests / t_seq
+    gaps = np.random.default_rng(29).exponential(1.0 / rate, size=num_requests)
+    gaps[0] = 0.0
+    poisson_stats, poisson, t_poisson = asyncio.run(serve(gaps))
+
+    # correctness: every future got ITS OWN column back
+    err = max(
+        float(np.abs(r.x - xs[:, i]).max())
+        for res in (burst, poisson)
+        for i, r in enumerate(res)
+    )
+    speedup = t_seq / t_coal
+    bp, pp = _percentiles(burst), _percentiles(poisson)
+
+    rows = [
+        {
+            "name": f"serving/sequential_{num_requests}x_{m}x{n}",
+            "us_per_call": t_seq / num_requests * 1e6,
+            "derived": f"total={t_seq:.3f}s throughput={num_requests / t_seq:.1f}req/s",
+        },
+        {
+            "name": f"serving/coalesced_{num_requests}x_{m}x{n}_b{MAX_BATCH}",
+            "us_per_call": t_coal / num_requests * 1e6,
+            "derived": (
+                f"total={t_coal:.3f}s throughput={num_requests / t_coal:.1f}req/s "
+                f"speedup_vs_sequential={speedup:.2f}x "
+                f"batches={burst_stats.batches} "
+                f"mean_batch={burst_stats.mean_batch_size:.2f} "
+                f"p50={bp['p50_ms']:.1f}ms p99={bp['p99_ms']:.1f}ms "
+                f"maxerr={err:.1e}"
+            ),
+        },
+        {
+            "name": f"serving/poisson_{num_requests}x_{m}x{n}_b{MAX_BATCH}",
+            "us_per_call": t_poisson / num_requests * 1e6,
+            "derived": (
+                f"total={t_poisson:.3f}s offered_rate={rate:.0f}req/s "
+                f"served={num_requests / t_poisson:.1f}req/s "
+                f"batches={poisson_stats.batches} "
+                f"mean_batch={poisson_stats.mean_batch_size:.2f} "
+                f"timeout_flushes={poisson_stats.timeout_flushes} "
+                f"p50={pp['p50_ms']:.1f}ms p99={pp['p99_ms']:.1f}ms"
+            ),
+        },
+    ]
+    checks = {
+        "coalesced_speedup_vs_sequential": speedup,
+        "max_abs_err": err,
+        "burst_p50_ms": bp["p50_ms"],
+        "burst_p99_ms": bp["p99_ms"],
+        "poisson_p50_ms": pp["p50_ms"],
+        "poisson_p99_ms": pp["p99_ms"],
+        "poisson_mean_batch": poisson_stats.mean_batch_size,
+    }
+    return rows, checks
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--requests", type=int, default=64)
+    args = ap.parse_args()
+
+    rows, checks = run(quick=args.quick, num_requests=args.requests)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+
+    from benchmarks.record import write_record
+
+    path = write_record("serving", rows, checks, quick=args.quick)
+    print(f"wrote {path}")
+
+    speedup = checks["coalesced_speedup_vs_sequential"]
+    ok = speedup >= 3.0 and checks["max_abs_err"] <= 1e-3
+    print(
+        f"acceptance: coalesced_vs_sequential={speedup:.2f}x (need >=3x), "
+        f"maxerr={checks['max_abs_err']:.1e} (need <=1e-3) -> "
+        f"{'PASS' if ok else 'FAIL'}"
+    )
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,13 @@ from repro.core.partition import (
     partition_system,
     resolve_mode,
 )
-from repro.core.solver_api import PreparedSolver, SolveResult, prepare, solve
+from repro.core.solver_api import (
+    ColumnResult,
+    PreparedSolver,
+    SolveResult,
+    prepare,
+    solve,
+)
 from repro.core.apc import solve_apc, setup_classical, classical_factors
 from repro.core.dapc import (
     solve_dapc,
@@ -27,6 +33,7 @@ __all__ = [
     "block_rhs",
     "resolve_mode",
     "SolveResult",
+    "ColumnResult",
     "PreparedSolver",
     "prepare",
     "solve",

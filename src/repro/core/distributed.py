@@ -52,7 +52,7 @@ def _psum(x, axes):
 
 def solve_sharded(
     blocks: jnp.ndarray,  # (J, p, n) — J divisible by prod(mesh[block_axes])
-    bvecs: jnp.ndarray,  # (J, p)
+    bvecs: jnp.ndarray,  # (J, p) one RHS, or (J, p, k) coalesced batch
     mesh: Mesh,
     mode: str,
     block_axes: Sequence[str] = ("data",),
@@ -65,7 +65,17 @@ def solve_sharded(
     x_ref: jnp.ndarray | None = None,
     compress: str | None = None,  # "bf16_delta" halves psum payload
 ):
-    """Distributed consensus solve, row-sharded blocks. Returns (x̄, history)."""
+    """Distributed consensus solve, row-sharded blocks. Returns (x̄, history).
+
+    ``bvecs`` with a trailing RHS axis ``(J, p, k)`` — the shape the serving
+    queue's coalesced batches arrive in — runs all k consensus iterations in
+    the same sharded program: state becomes ``(J_loc, n, k)``, the projector
+    application feeds the MXU as (p,n)×(n,k) matmuls, and every collective
+    (the consensus ``pmean``, the residual ``psum``) carries k columns per
+    round trip instead of one. ``x̄`` comes back ``(n, k)`` and the history
+    rows per-system ``(k,)``. A straggling worker goes stale for ALL of its
+    columns at once (one mask per block, as a real slow worker would).
+    """
     block_axes = tuple(block_axes)
     num_blocks = blocks.shape[0]
     spec_in = P(block_axes)
@@ -79,22 +89,23 @@ def solve_sharded(
                    else {"residual_sq": P()}),
     )
     def run(local_blocks, local_bvecs, ref):
-        # Algorithm 1 steps 2–3, vmapped over this shard's blocks
+        # Algorithm 1 steps 2–3, vmapped over this shard's blocks; all
+        # einsums take `...` so a trailing RHS axis k rides along unchanged
         if method == "dapc":
             x0s, Ws = setup_decomposed(local_blocks, local_bvecs, mode)
             apply_fn = lambda v: v - jnp.einsum(
-                "jpn,jp->jn", Ws, jnp.einsum("jpn,jn->jp", Ws, v)
+                "jpn,jp...->jn...", Ws, jnp.einsum("jpn,jn...->jp...", Ws, v)
             )
         else:  # classical APC
             x0s, Ps = setup_classical(local_blocks, local_bvecs, mode)
-            apply_fn = lambda v: jnp.einsum("jmn,jn->jm", Ps, v)
+            apply_fn = lambda v: jnp.einsum("jmn,jn...->jm...", Ps, v)
 
         def metrics(xbar):
-            r = jnp.einsum("jpn,n->jp", local_blocks, xbar) - local_bvecs
-            out = {"residual_sq": _psum(jnp.sum(r * r), block_axes)}
+            r = jnp.einsum("jpn,n...->jp...", local_blocks, xbar) - local_bvecs
+            out = {"residual_sq": _psum(jnp.sum(r * r, axis=(0, 1)), block_axes)}
             if x_ref is not None:
                 d = xbar - ref
-                out["mse"] = jnp.mean(d * d)
+                out["mse"] = jnp.mean(d * d, axis=0)
             return out
 
         xbar = _pmean(jnp.mean(x0s, axis=0), block_axes)  # eq. (5)
@@ -102,16 +113,18 @@ def solve_sharded(
 
         def step(carry, key):
             xs, pub, xbar = carry
-            xs = xs + gamma * apply_fn(xbar[None, :] - xs)  # eq. (6)
-            if q > 0.0:  # straggler simulation: stale contributions
+            xs = xs + gamma * apply_fn(xbar[None] - xs)  # eq. (6)
+            if q > 0.0:  # straggler simulation: stale contributions — one
+                # mask per block, shared across the RHS columns it serves
                 alive = (
-                    jax.random.uniform(key, (xs.shape[0], 1)) >= q
+                    jax.random.uniform(key, (xs.shape[0],) + (1,) * (xs.ndim - 1))
+                    >= q
                 ).astype(xs.dtype)
                 pub = alive * xs + (1.0 - alive) * pub
             else:
                 pub = xs
             if compress == "bf16_delta":
-                local = jnp.mean(pub - xbar[None, :], axis=0)
+                local = jnp.mean(pub - xbar[None], axis=0)
                 delta = _pmean(local.astype(jnp.bfloat16), block_axes)
                 xbar = xbar + eta * delta.astype(xbar.dtype)  # eq. (7), Δ form
             else:
@@ -156,7 +169,7 @@ def _tsqr(b_loc: jnp.ndarray, col_axis: str, col_shards: int):
 
 def solve_sharded_2d(
     blocks_t: jnp.ndarray,  # (J, n, p): per-block A_jᵀ (wide mode only)
-    bvecs: jnp.ndarray,  # (J, p)
+    bvecs: jnp.ndarray,  # (J, p) one RHS, or (J, p, k) coalesced batch
     mesh: Mesh,
     block_axes: Sequence[str] = ("data",),
     col_axis: str = "model",
@@ -166,7 +179,12 @@ def solve_sharded_2d(
     x_ref: jnp.ndarray | None = None,
 ):
     """2D-parallel decomposed APC (wide regime): TSQR setup + column-sharded
-    consensus. ``n`` must divide evenly by mesh.shape[col_axis]."""
+    consensus. ``n`` must divide evenly by mesh.shape[col_axis].
+
+    Like ``solve_sharded``, a trailing RHS axis ``(J, p, k)`` batches all k
+    systems through the same program: the TSQR factor is shared (b-independent),
+    the substitution and every psum/pmean carry k columns, and x̄ returns
+    ``(n, k)`` with per-system ``(k,)`` history rows."""
     block_axes = tuple(block_axes)
     col_shards = mesh.shape[col_axis]
     n = blocks_t.shape[1]
@@ -188,33 +206,35 @@ def solve_sharded_2d(
         ),
     )
     def run(bt_loc, b_loc, ref_loc):
-        # bt_loc: (J_loc, n_loc, p); b_loc: (J_loc, p)
+        # bt_loc: (J_loc, n_loc, p); b_loc: (J_loc, p[, k])
         def setup_one(bt, b):
             q_loc, r = _tsqr(bt, col_axis, col_shards)  # W = q_locᵀ col-shard
             z = jax.scipy.linalg.solve_triangular(r.mT, b, lower=True)
-            return q_loc @ z, q_loc  # x0 (n_loc,), factor (n_loc, p)
+            return q_loc @ z, q_loc  # x0 (n_loc[, k]), factor (n_loc, p)
 
-        x0s, Qs = jax.vmap(setup_one)(bt_loc, b_loc)  # (J_loc, n_loc[, p])
+        x0s, Qs = jax.vmap(setup_one)(bt_loc, b_loc)  # (J_loc, n_loc[, k])
 
-        def apply_fn(v):  # v (J_loc, n_loc): P v = v − Q psum(Qᵀ v)
-            u = _psum(jnp.einsum("jnp,jn->jp", Qs, v), (col_axis,))
-            return v - jnp.einsum("jnp,jp->jn", Qs, u)
+        def apply_fn(v):  # v (J_loc, n_loc[, k]): P v = v − Q psum(Qᵀ v)
+            u = _psum(jnp.einsum("jnp,jn...->jp...", Qs, v), (col_axis,))
+            return v - jnp.einsum("jnp,jp...->jn...", Qs, u)
 
         def metrics(xbar_loc):
             # residual: A_j x = psum_model(B_locᵀ x_loc)
-            ax = _psum(jnp.einsum("jnp,n->jp", bt_loc, xbar_loc), (col_axis,))
+            ax = _psum(
+                jnp.einsum("jnp,n...->jp...", bt_loc, xbar_loc), (col_axis,)
+            )
             r = ax - b_loc
-            out = {"residual_sq": _psum(jnp.sum(r * r), block_axes)}
+            out = {"residual_sq": _psum(jnp.sum(r * r, axis=(0, 1)), block_axes)}
             if x_ref is not None:
                 d = xbar_loc - ref_loc
-                out["mse"] = _pmean(jnp.mean(d * d), (col_axis,))
+                out["mse"] = _pmean(jnp.mean(d * d, axis=0), (col_axis,))
             return out
 
         xbar = _pmean(jnp.mean(x0s, axis=0), block_axes)
 
         def step(carry, _):
             xs, xbar = carry
-            xs = xs + gamma * apply_fn(xbar[None, :] - xs)
+            xs = xs + gamma * apply_fn(xbar[None] - xs)
             xbar = eta * _pmean(jnp.mean(xs, axis=0), block_axes) + (
                 1.0 - eta
             ) * xbar

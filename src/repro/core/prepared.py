@@ -33,6 +33,18 @@ METHODS = ("apc", "dapc", "dgd", "cgnr")
 
 
 @dataclasses.dataclass(frozen=True)
+class ColumnResult:
+    """Per-column view of a batched solve — what the serving queue scatters
+    back to the request that contributed this column."""
+
+    index: int  # column position in the (m, k) batch
+    x: np.ndarray  # (n,)
+    residual_sq: float  # final ||A x − b_i||²
+    iterations: int  # epochs until residual_sq <= tol² (num_epochs if never)
+    converged: bool  # True iff tolerance reached within the epoch budget
+
+
+@dataclasses.dataclass(frozen=True)
 class SolveResult:
     x: np.ndarray  # (n,) — or (n, k) for a batched solve
     method: str
@@ -57,6 +69,59 @@ class SolveResult:
     @property
     def final_residual(self):
         return self._last(self.history["residual_sq"])
+
+    def _residual_trace(self) -> np.ndarray:
+        """Per-epoch residual_sq as (num_epochs, k) — k=1 for a single RHS."""
+        h = self.history.get("residual_sq")
+        if h is None:
+            raise ValueError(f"method {self.method!r} recorded no residual history")
+        trace = np.asarray(h)
+        return trace[:, None] if trace.ndim == 1 else trace
+
+    def iterations_to_tol(self, tol: float) -> np.ndarray:
+        """Per-column epochs needed to reach ``residual_sq <= tol²``.
+
+        A batched solve runs every column for the full epoch budget (one
+        compiled scan), so a hard column cannot make its batchmates wrong —
+        but it can hide that the easy columns were done long before the
+        scan ended. This is the early-exit *report*: columns that never
+        reach tolerance come back as ``num_epochs`` and are flagged
+        ``converged=False`` in ``per_column``, so the serving layer can
+        surface stragglers per request instead of per batch.
+        """
+        trace = self._residual_trace()  # (E, k)
+        reached = trace <= float(tol) ** 2
+        return np.where(
+            reached.any(axis=0), reached.argmax(axis=0) + 1, self.num_epochs
+        ).astype(np.int64)
+
+    def per_column(self, tol: float | None = None) -> list[ColumnResult]:
+        """Scatter a (possibly batched) result into per-column records.
+
+        ``tol=None`` skips the tolerance sweep: every column reports the
+        full ``num_epochs`` with ``converged`` judged against the final
+        residual being finite.
+        """
+        x = self.x if self.x.ndim == 2 else self.x[:, None]
+        trace = self._residual_trace()
+        final = trace[-1]
+        if tol is None:
+            iters = np.full(x.shape[1], self.num_epochs, dtype=np.int64)
+            conv = np.isfinite(final)
+        else:
+            iters = self.iterations_to_tol(tol)
+            conv = iters < self.num_epochs
+            conv |= final <= float(tol) ** 2  # converged exactly at the budget
+        return [
+            ColumnResult(
+                index=i,
+                x=np.asarray(x[:, i]),
+                residual_sq=float(final[i]),
+                iterations=int(iters[i]),
+                converged=bool(conv[i]),
+            )
+            for i in range(x.shape[1])
+        ]
 
 
 @dataclasses.dataclass

@@ -13,6 +13,7 @@ import dataclasses
 
 from repro.core.prepared import (  # noqa: F401  (re-exported API)
     METHODS,
+    ColumnResult,
     PreparedSolver,
     SolveResult,
     prepare,

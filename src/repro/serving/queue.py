@@ -1,0 +1,367 @@
+"""Async request-coalescing solve server over ``PreparedSolver``.
+
+The paper's economics are many-clients/one-system: setup (per-block QR) is
+amortized once per matrix, and the marginal cost of a right-hand side drops
+again when several are solved as one ``(m, k)`` column batch (the consensus
+projector runs as (p,n)×(n,k) MXU matmuls — benchmarks/multirhs.py). Real
+request streams do not arrive in clean batches, so this module supplies the
+serving loop that manufactures them:
+
+  * ``SolveServer.submit(fp, b)`` — accept one single-RHS request and await
+    its result;
+  * a per-system dispatcher coalesces pending requests into a column batch
+    under a ``max_batch`` / ``max_wait_ms`` policy (flush on whichever
+    trips first — the standard continuous-batching compromise between
+    throughput and tail latency);
+  * the batch dispatches through a ``PreparedPool`` — an LRU-bounded cache
+    of ``PreparedSolver``s keyed by matrix fingerprint, so factors for hot
+    systems stay resident and cold ones are re-prepared on demand;
+  * per-column results (solution, final residual, epochs-to-tolerance via
+    ``SolveResult.per_column``) scatter back to the per-request futures in
+    arrival order.
+
+Solves run on a single worker thread via ``run_in_executor`` so the event
+loop keeps accepting arrivals while a batch is on the accelerator; jax
+dispatch is not re-entrant-friendly and the single worker serializes it.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any
+
+import numpy as np
+
+from repro.core import prepare
+from repro.core.prepared import PreparedSolver
+
+
+def matrix_fingerprint(A: np.ndarray) -> str:
+    """Content hash identifying a system matrix across requests.
+
+    Hashes shape + dtype + raw bytes; computed once at ``register`` time
+    (never per request), so the O(mn) pass is part of the setup cost the
+    pool amortizes, like the QR itself.
+    """
+    A = np.ascontiguousarray(A)
+    h = hashlib.sha1()
+    h.update(repr((A.shape, A.dtype.str)).encode())
+    h.update(A.tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class PoolStats:
+    prepares: int = 0  # cache misses that ran prepare()
+    hits: int = 0
+    evictions: int = 0
+
+
+class PreparedPool:
+    """LRU-bounded ``{fingerprint: PreparedSolver}`` with a side registry.
+
+    The registry keeps the raw (A, prepare-kwargs) per fingerprint so an
+    evicted entry can be re-prepared on demand — eviction drops the
+    *factors* (the HBM/CPU-memory cost), never the ability to serve the
+    system. Eviction only removes the pool's reference: an in-flight solve
+    holds its own reference to the ``PreparedSolver``, so a batch that is
+    mid-iteration when its entry is evicted finishes unharmed.
+
+    Thread-safe: ``get`` may run on the server's solver thread while
+    ``register`` runs on the event-loop thread.
+    """
+
+    def __init__(self, max_size: int = 4, **prepare_kwargs):
+        if max_size < 1:
+            raise ValueError(f"max_size must be >= 1, got {max_size}")
+        self.max_size = max_size
+        self.prepare_kwargs = dict(prepare_kwargs)
+        self._systems: dict[str, tuple[np.ndarray, dict]] = {}
+        self._lru: OrderedDict[str, PreparedSolver] = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = PoolStats()
+
+    def register(self, A: np.ndarray, **prepare_kwargs) -> str:
+        """Record a system for later ``get``s; returns its fingerprint.
+
+        Idempotent — re-registering the same matrix returns the same
+        fingerprint and keeps the first registration's kwargs.
+        """
+        A = np.asarray(A)
+        if A.ndim != 2:
+            raise ValueError(f"expected a 2D system matrix, got shape {A.shape}")
+        fp = matrix_fingerprint(A)
+        with self._lock:
+            self._systems.setdefault(
+                fp, (A, {**self.prepare_kwargs, **prepare_kwargs})
+            )
+        return fp
+
+    def num_rows(self, fingerprint: str) -> int:
+        return self._systems[fingerprint][0].shape[0]
+
+    def get(self, fingerprint: str) -> PreparedSolver:
+        """The PreparedSolver for ``fingerprint`` — LRU hit or re-prepare."""
+        with self._lock:
+            prep = self._lru.get(fingerprint)
+            if prep is not None:
+                self._lru.move_to_end(fingerprint)
+                self.stats.hits += 1
+                return prep
+            if fingerprint not in self._systems:
+                raise KeyError(
+                    f"unknown system {fingerprint!r}; call register(A) first"
+                )
+            A, kwargs = self._systems[fingerprint]
+        # factorize outside the lock (the expensive part)
+        prep = prepare(A, **kwargs)
+        with self._lock:
+            self.stats.prepares += 1
+            self._lru[fingerprint] = prep
+            self._lru.move_to_end(fingerprint)
+            while len(self._lru) > self.max_size:
+                self._lru.popitem(last=False)
+                self.stats.evictions += 1
+        return prep
+
+    def __contains__(self, fingerprint: str) -> bool:
+        with self._lock:
+            return fingerprint in self._lru
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._lru)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """What one coalesced request gets back (its column of the batch)."""
+
+    x: np.ndarray  # (n,)
+    residual_sq: float  # final ||A x − b||²
+    iterations: int  # epochs to tolerance (num_epochs if no tol / never)
+    converged: bool
+    batch_size: int  # how many requests shared the compiled program
+    column: int  # this request's column index within the batch
+    queue_ms: float  # enqueue → batch dispatch
+    solve_ms: float  # batch dispatch → results ready (shared by the batch)
+
+
+@dataclasses.dataclass
+class ServerStats:
+    requests: int = 0
+    batches: int = 0
+    full_batches: int = 0  # flushed because max_batch was reached
+    timeout_flushes: int = 0  # flushed because max_wait_ms elapsed
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.requests / self.batches if self.batches else 0.0
+
+
+class _Pending:
+    __slots__ = ("b", "future", "t_enqueue")
+
+    def __init__(self, b, future, t_enqueue):
+        self.b = b
+        self.future = future
+        self.t_enqueue = t_enqueue
+
+
+_SHUTDOWN = object()
+
+
+class SolveServer:
+    """Micro-batching front end: single-RHS requests in, coalesced
+    ``(m, k)`` ``PreparedSolver.solve`` calls out.
+
+    One dispatcher task per registered system keeps batches homogeneous (a
+    batch is columns against ONE matrix); requests for different systems
+    queue independently and only contend for the solver thread.
+
+    Use as an async context manager, or call ``aclose()`` when done::
+
+        async with SolveServer(max_batch=8, max_wait_ms=2.0) as srv:
+            fp = srv.register(A)
+            results = await asyncio.gather(*(srv.submit(fp, b) for b in bs))
+    """
+
+    def __init__(
+        self,
+        pool: PreparedPool | None = None,
+        max_batch: int = 8,
+        max_wait_ms: float = 2.0,
+        num_epochs: int = 100,
+        tol: float | None = None,
+        pool_size: int = 4,
+        prepare_kwargs: dict | None = None,
+        solve_kwargs: dict | None = None,
+        bucket_pad: bool = True,
+    ):
+        """``bucket_pad=True`` pads a partial batch with zero columns up to
+        ``max_batch`` so every dispatch reuses ONE compiled (m, max_batch)
+        program — without it, each distinct coalesced width k jit-compiles
+        its own executable, and a bursty trace pays a compile per new width
+        (shape bucketing, the standard serving fix). The consensus iteration
+        is column-separable, so padding cannot perturb real columns; padded
+        columns are dropped before scatter."""
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.pool = pool or PreparedPool(pool_size, **(prepare_kwargs or {}))
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.num_epochs = int(num_epochs)
+        self.tol = tol
+        self.bucket_pad = bool(bucket_pad)
+        self.solve_kwargs = dict(solve_kwargs or {})
+        self.stats = ServerStats()
+        self._queues: dict[str, asyncio.Queue] = {}
+        self._dispatchers: dict[str, asyncio.Task] = {}
+        self._executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="solve"
+        )
+        self._closed = False
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def __aenter__(self) -> "SolveServer":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    async def aclose(self) -> None:
+        """Drain dispatchers (pending requests still complete) and shut down."""
+        self._closed = True
+        for q in self._queues.values():
+            q.put_nowait(_SHUTDOWN)
+        for task in self._dispatchers.values():
+            await task
+        self._executor.shutdown(wait=True)
+
+    # -- request path -------------------------------------------------------
+
+    def register(self, A: np.ndarray, **prepare_kwargs) -> str:
+        """Register a system matrix; returns the fingerprint to submit with."""
+        return self.pool.register(A, **prepare_kwargs)
+
+    async def submit(self, fingerprint: str, b: np.ndarray) -> RequestResult:
+        """Submit one right-hand side; resolves when its batch completes."""
+        if self._closed:
+            raise RuntimeError("server is closed")
+        b = np.asarray(b)
+        m = self.pool.num_rows(fingerprint)  # KeyError for unknown systems
+        if b.shape != (m,):
+            raise ValueError(f"rhs shape {b.shape} != ({m},) for this system")
+        loop = asyncio.get_running_loop()
+        future: asyncio.Future = loop.create_future()
+        queue = self._queues.get(fingerprint)
+        if queue is None:
+            queue = self._queues[fingerprint] = asyncio.Queue()
+            self._dispatchers[fingerprint] = asyncio.create_task(
+                self._dispatch_loop(fingerprint, queue)
+            )
+        queue.put_nowait(_Pending(b, future, loop.time()))
+        return await future
+
+    # -- batching loop ------------------------------------------------------
+
+    async def _dispatch_loop(self, fingerprint: str, queue: asyncio.Queue):
+        loop = asyncio.get_running_loop()
+        while True:
+            first = await queue.get()
+            if first is _SHUTDOWN:
+                return
+            batch = [first]
+            deadline = loop.time() + self.max_wait_ms / 1e3
+            shutdown = False
+            while len(batch) < self.max_batch:
+                remaining = deadline - loop.time()
+                if remaining <= 0:
+                    break
+                try:
+                    item = await asyncio.wait_for(queue.get(), remaining)
+                except asyncio.TimeoutError:
+                    break
+                if item is _SHUTDOWN:
+                    shutdown = True
+                    break
+                batch.append(item)
+            if len(batch) >= self.max_batch:
+                self.stats.full_batches += 1
+            else:
+                self.stats.timeout_flushes += 1
+            await self._solve_batch(fingerprint, batch)
+            if shutdown:
+                return
+
+    async def _solve_batch(self, fingerprint: str, batch: list[_Pending]):
+        loop = asyncio.get_running_loop()
+        t_dispatch = loop.time()
+        B = np.stack([p.b for p in batch], axis=1)  # (m, k), arrival order
+        if self.bucket_pad and B.shape[1] < self.max_batch:
+            pad = np.zeros((B.shape[0], self.max_batch - B.shape[1]), B.dtype)
+            B = np.concatenate([B, pad], axis=1)
+
+        def run():
+            # pool.get inside the solver thread: a cache miss re-prepares
+            # there, and the local reference keeps the factors alive even if
+            # the pool evicts this entry mid-solve
+            prep = self.pool.get(fingerprint)
+            return prep.solve(B, num_epochs=self.num_epochs, **self.solve_kwargs)
+
+        try:
+            result = await loop.run_in_executor(self._executor, run)
+            solve_ms = (loop.time() - t_dispatch) * 1e3
+            columns = result.per_column(tol=self.tol)
+        except Exception as exc:  # scatter the failure to every batchmate —
+            # the dispatcher task must survive, or pending submits hang
+            for pending in batch:
+                if not pending.future.done():
+                    pending.future.set_exception(exc)
+            return
+        self.stats.requests += len(batch)
+        self.stats.batches += 1
+        for pending, col in zip(batch, columns):
+            if pending.future.done():  # caller went away (cancelled)
+                continue
+            pending.future.set_result(
+                RequestResult(
+                    x=col.x,
+                    residual_sq=col.residual_sq,
+                    iterations=col.iterations,
+                    converged=col.converged,
+                    batch_size=len(batch),
+                    column=col.index,
+                    queue_ms=(t_dispatch - pending.t_enqueue) * 1e3,
+                    solve_ms=solve_ms,
+                )
+            )
+
+
+async def replay_trace(
+    server: SolveServer,
+    fingerprint: str,
+    rhs: np.ndarray,  # (m, k) — column i is request i's b
+    gaps_s: Any,  # iterable of k inter-arrival gaps in seconds (first may be 0)
+) -> list[RequestResult]:
+    """Replay an arrival trace: request i fires after ``sum(gaps_s[:i+1])``.
+
+    Results come back indexed by REQUEST (not completion) order, so callers
+    can check each response against the right-hand side that produced it.
+    Used by ``repro.launch.serve_solver`` and the serving benchmark.
+    """
+
+    async def client(i: int, delay: float):
+        await asyncio.sleep(delay)
+        return await server.submit(fingerprint, rhs[:, i])
+
+    arrival, tasks = 0.0, []
+    for i, gap in enumerate(gaps_s):
+        arrival += float(gap)
+        tasks.append(asyncio.create_task(client(i, arrival)))
+    return list(await asyncio.gather(*tasks))

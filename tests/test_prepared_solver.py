@@ -85,6 +85,59 @@ def test_batched_through_one_shot_wrapper(problem, rhs_batch):
     np.testing.assert_allclose(res.x, xs, atol=1e-4)
 
 
+def test_per_column_reporting(problem, rhs_batch):
+    """Per-column scatter: each ColumnResult carries its own solution slice,
+    final residual, and epochs-to-tolerance."""
+    B, xs = rhs_batch
+    prep = prepare(problem.A, num_blocks=8, materialize_p=False)
+    res = prep.solve(B, num_epochs=200)
+    cols = res.per_column(tol=1e-2)
+    assert len(cols) == xs.shape[1]
+    for i, col in enumerate(cols):
+        assert col.index == i
+        np.testing.assert_array_equal(col.x, res.x[:, i])
+        assert col.converged
+        assert 1 <= col.iterations <= 200
+        assert col.residual_sq <= 1e-4
+    # the tolerance sweep agrees with the per-column history
+    iters = res.iterations_to_tol(1e-2)
+    trace = np.asarray(res.history["residual_sq"])
+    for i, col in enumerate(cols):
+        assert iters[i] == col.iterations
+        assert trace[col.iterations - 1, i] <= 1e-4
+        if col.iterations > 1:
+            assert trace[col.iterations - 2, i] > 1e-4
+
+
+def test_per_column_flags_straggler_column(problem, rhs_batch):
+    """A column whose RHS is 1000x larger needs more epochs to reach the
+    same ABSOLUTE tolerance — the early-exit report must single it out
+    instead of letting the batch hide it."""
+    B, xs = rhs_batch
+    scaled = B.copy()
+    scaled[:, 2] *= 1e3  # consistent system, much larger residual scale
+    prep = prepare(problem.A, num_blocks=8, materialize_p=False)
+    res = prep.solve(scaled, num_epochs=60)
+    iters = res.iterations_to_tol(1e-2)
+    others = [i for i in range(xs.shape[1]) if i != 2]
+    assert iters[2] > max(iters[i] for i in others)
+    cols = res.per_column(tol=1e-2)
+    assert all(cols[i].converged for i in others)
+    # batchmates are NOT degraded: their solutions still match truth
+    for i in others:
+        np.testing.assert_allclose(cols[i].x, xs[:, i], atol=1e-3)
+
+
+def test_per_column_single_rhs(problem):
+    """per_column on an unbatched solve degrades to one column."""
+    prep = prepare(problem.A, num_blocks=8, materialize_p=False)
+    res = prep.solve(problem.b, num_epochs=100)
+    (col,) = res.per_column(tol=1e-2)
+    assert col.index == 0 and col.x.shape == problem.b.shape[:0] + (96,)
+    np.testing.assert_array_equal(col.x, res.x)
+    assert col.converged
+
+
 def test_prepared_solver_reports_setup_and_solves(problem):
     prep = prepare(problem.A, num_blocks=8)
     assert prep.setup_seconds > 0.0

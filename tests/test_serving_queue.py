@@ -1,0 +1,208 @@
+"""Serving-queue semantics tests (ISSUE 2 tentpole).
+
+The batching policy and the scatter are where serving bugs live:
+  (a) results must map to the REQUEST that produced them regardless of
+      arrival order or which batch a request lands in;
+  (b) ``max_wait_ms`` must flush a partial batch (a lone request cannot
+      hang waiting for batchmates);
+  (c) a full batch must dispatch immediately (not wait out the deadline);
+  (d) the PreparedSolver pool must evict LRU under its size bound without
+      breaking solves that are already holding the evicted entry.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.serving.queue import (
+    PreparedPool,
+    SolveServer,
+    matrix_fingerprint,
+    replay_trace,
+)
+from repro.sparse import make_problem
+
+EPOCHS = 150
+PREP_KW = dict(num_blocks=8, materialize_p=False)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(n=96, m=384, seed=3, dtype=np.float32)
+
+
+@pytest.fixture(scope="module")
+def rhs_batch(problem):
+    rng = np.random.default_rng(17)
+    xs = rng.standard_normal((96, 10)).astype(np.float32)
+    return problem.A @ xs, xs
+
+
+def _run(coro):
+    return asyncio.run(asyncio.wait_for(coro, timeout=120))
+
+
+def test_out_of_order_arrivals_map_to_their_futures(problem, rhs_batch):
+    """Submit columns in shuffled order with jittered arrival gaps; every
+    future must resolve to the solution of ITS OWN right-hand side."""
+    B, xs = rhs_batch
+    k = xs.shape[1]
+    order = np.random.default_rng(5).permutation(k)
+
+    async def main():
+        async with SolveServer(
+            max_batch=4, max_wait_ms=10.0, num_epochs=EPOCHS,
+            prepare_kwargs=PREP_KW,
+        ) as server:
+            fp = server.register(problem.A)
+
+            async def client(i, delay):
+                await asyncio.sleep(delay)
+                return i, await server.submit(fp, B[:, i])
+
+            results = await asyncio.gather(
+                *(client(int(i), 0.002 * pos) for pos, i in enumerate(order))
+            )
+            return results, server.stats
+
+    results, stats = _run(main())
+    assert len(results) == k
+    for i, res in results:
+        np.testing.assert_allclose(res.x, xs[:, i], atol=1e-3)
+        assert res.residual_sq < 1e-3
+        assert 1 <= res.batch_size <= 4
+        assert 0 <= res.column < 4
+    assert stats.requests == k
+    assert stats.batches >= -(-k // 4)  # coalesced, possibly partial flushes
+
+
+def test_max_wait_flushes_partial_batch(problem, rhs_batch):
+    """Fewer requests than max_batch must still complete via the deadline."""
+    B, xs = rhs_batch
+
+    async def main():
+        async with SolveServer(
+            max_batch=64, max_wait_ms=20.0, num_epochs=EPOCHS,
+            prepare_kwargs=PREP_KW,
+        ) as server:
+            fp = server.register(problem.A)
+            results = await asyncio.gather(
+                *(server.submit(fp, B[:, i]) for i in range(3))
+            )
+            return results, server.stats
+
+    results, stats = _run(main())
+    assert [r.batch_size for r in results] == [3, 3, 3]
+    assert stats.timeout_flushes >= 1 and stats.full_batches == 0
+    for i, res in enumerate(results):
+        np.testing.assert_allclose(res.x, xs[:, i], atol=1e-3)
+
+
+def test_full_batch_dispatches_before_deadline(problem, rhs_batch):
+    """max_batch concurrent requests must not wait out a huge max_wait_ms."""
+    B, xs = rhs_batch
+
+    async def main():
+        async with SolveServer(
+            max_batch=4, max_wait_ms=60_000.0, num_epochs=EPOCHS,
+            prepare_kwargs=PREP_KW,
+        ) as server:
+            fp = server.register(problem.A)
+            return await asyncio.gather(
+                *(server.submit(fp, B[:, i]) for i in range(4))
+            )
+
+    results = _run(asyncio.wait_for(main(), timeout=60))  # << the deadline
+    assert [r.batch_size for r in results] == [4, 4, 4, 4]
+    assert sorted(r.column for r in results) == [0, 1, 2, 3]
+
+
+def test_submit_validates_shape_and_system(problem):
+    async def main():
+        async with SolveServer(prepare_kwargs=PREP_KW) as server:
+            fp = server.register(problem.A)
+            with pytest.raises(ValueError, match="rhs shape"):
+                await server.submit(fp, np.zeros(7, np.float32))
+            with pytest.raises(KeyError):
+                await server.submit("deadbeef", problem.b)
+
+    _run(main())
+
+
+def test_pool_lru_eviction_and_reprepare():
+    probs = [make_problem(n=32, m=128, seed=s, dtype=np.float32) for s in (1, 2, 3)]
+    pool = PreparedPool(max_size=2, **PREP_KW)
+    fps = [pool.register(p.A) for p in probs]
+    assert len(set(fps)) == 3  # distinct systems -> distinct fingerprints
+    assert fps[0] == matrix_fingerprint(probs[0].A)
+
+    pool.get(fps[0]); pool.get(fps[1])
+    assert pool.stats.prepares == 2 and len(pool) == 2
+    pool.get(fps[0])  # hit refreshes recency: order now [1, 0]
+    assert pool.stats.hits == 1
+    pool.get(fps[2])  # evicts fps[1] (LRU), not fps[0]
+    assert pool.stats.evictions == 1
+    assert fps[0] in pool and fps[2] in pool and fps[1] not in pool
+    pool.get(fps[1])  # re-prepared on demand from the registry
+    assert pool.stats.prepares == 4
+
+
+def test_eviction_does_not_break_inflight_solver():
+    """A solve holding the evicted PreparedSolver must finish correctly —
+    eviction only drops the pool's reference, never live factors."""
+    probs = [make_problem(n=32, m=128, seed=s, dtype=np.float32) for s in (4, 5, 6)]
+    pool = PreparedPool(max_size=1, **PREP_KW)
+    fps = [pool.register(p.A) for p in probs]
+    inflight = pool.get(fps[0])  # "dispatch" holds its own reference
+    pool.get(fps[1]); pool.get(fps[2])  # evict fps[0] twice over
+    assert fps[0] not in pool
+    res = inflight.solve(probs[0].b, num_epochs=200)
+    np.testing.assert_allclose(res.x, probs[0].x_true, atol=1e-3)
+
+
+def test_server_interleaves_multiple_systems_with_tiny_pool(rhs_batch):
+    """Two systems through a pool of ONE: every batch stays homogeneous,
+    evictions happen between batches, and all results stay correct."""
+    pa = make_problem(n=48, m=192, seed=7, dtype=np.float32)
+    pb = make_problem(n=48, m=192, seed=8, dtype=np.float32)
+    rng = np.random.default_rng(9)
+    xa = rng.standard_normal((48, 4)).astype(np.float32)
+    xb = rng.standard_normal((48, 4)).astype(np.float32)
+    Ba, Bb = pa.A @ xa, pb.A @ xb
+
+    async def main():
+        async with SolveServer(
+            max_batch=4, max_wait_ms=10.0, num_epochs=EPOCHS,
+            pool_size=1, prepare_kwargs=PREP_KW,
+        ) as server:
+            fa, fb = server.register(pa.A), server.register(pb.A)
+            jobs = []
+            for i in range(4):  # interleave the two request streams
+                jobs.append(server.submit(fa, Ba[:, i]))
+                jobs.append(server.submit(fb, Bb[:, i]))
+            results = await asyncio.gather(*jobs)
+            return results, server.pool.stats
+
+    results, stats = _run(main())
+    for i in range(4):
+        np.testing.assert_allclose(results[2 * i].x, xa[:, i], atol=1e-3)
+        np.testing.assert_allclose(results[2 * i + 1].x, xb[:, i], atol=1e-3)
+    assert stats.evictions >= 1  # pool of 1 really did thrash
+
+
+def test_replay_trace_returns_request_order(problem, rhs_batch):
+    B, xs = rhs_batch
+
+    async def main():
+        async with SolveServer(
+            max_batch=8, max_wait_ms=5.0, num_epochs=EPOCHS,
+            prepare_kwargs=PREP_KW,
+        ) as server:
+            fp = server.register(problem.A)
+            return await replay_trace(
+                server, fp, B, np.full(xs.shape[1], 1e-4)
+            )
+
+    results = _run(main())
+    for i, res in enumerate(results):
+        np.testing.assert_allclose(res.x, xs[:, i], atol=1e-3)
