@@ -36,6 +36,7 @@ def main() -> None:
         record,
         roofline,
         serving_queue,
+        sparse,
         speedup,
     )
 
@@ -48,6 +49,7 @@ def main() -> None:
         "roofline": lambda: roofline.run(quick=args.quick),
         "multirhs": lambda: multirhs.run(quick=args.quick),
         "serving": lambda: serving_queue.run(quick=args.quick),
+        "sparse": lambda: sparse.run(quick=args.quick),
     }
     if args.only:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

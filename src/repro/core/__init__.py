@@ -12,8 +12,10 @@ from repro.core.solver_api import (
     PreparedSolver,
     SolveResult,
     prepare,
+    resolve_path,
     solve,
 )
+from repro.core.matfree import MatrixFreePreparedSolver, prepare_matfree
 from repro.core.apc import solve_apc, setup_classical, classical_factors
 from repro.core.dapc import (
     solve_dapc,
@@ -35,7 +37,10 @@ __all__ = [
     "SolveResult",
     "ColumnResult",
     "PreparedSolver",
+    "MatrixFreePreparedSolver",
     "prepare",
+    "prepare_matfree",
+    "resolve_path",
     "solve",
     "solve_apc",
     "setup_classical",

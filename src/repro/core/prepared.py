@@ -28,8 +28,57 @@ import numpy as np
 
 from repro.core import apc, cg, consensus, dapc, dgd, projections
 from repro.core.partition import BlockMode, Partition, block_rhs, partition_matrix
+from repro.sparse.matrix import COOMatrix
 
 METHODS = ("apc", "dapc", "dgd", "cgnr")
+
+# ``prepare(..., mode=...)`` accepts the dense block modes (tall/wide/auto)
+# plus the execution-path selectors: "dense" forces the densified path,
+# "matfree" the sparse-operator path (repro.core.matfree), and "auto" picks
+# from the nnz/memory estimate below.
+MATFREE_AUTO_DENSITY = 0.01  # auto never goes matfree below 99% sparsity
+MATFREE_AUTO_BYTES = 64 * 1024 * 1024  # ... or when dense blocks fit easily
+
+
+def _density(A) -> float:
+    if isinstance(A, COOMatrix):
+        m, n = A.shape
+        return A.nnz / float(m * n)
+    A = np.asarray(A)
+    return np.count_nonzero(A) / float(A.size)
+
+
+def resolve_path(
+    A,
+    num_blocks: int,
+    mode: str,
+    matfree_threshold_bytes: int | None = None,
+) -> str:
+    """Pick "dense" vs "matfree" from the mode plus an nnz/memory estimate.
+
+    mode="auto" goes matfree only when BOTH hold: density <= 1% (blocked
+    sparse formats lose to dense below that) and the dense path's resident
+    arrays (blocks + factors, ~2 copies of (J, p, n)) would exceed the
+    threshold (default 64 MiB) — small systems stay dense regardless.
+    """
+    if mode in ("tall", "wide", "dense"):
+        return "dense"
+    if mode == "matfree":
+        return "matfree"
+    if mode != "auto":
+        raise ValueError(
+            f"mode must be tall/wide/auto/dense/matfree, got {mode!r}"
+        )
+    threshold = (
+        MATFREE_AUTO_BYTES if matfree_threshold_bytes is None
+        else matfree_threshold_bytes
+    )
+    m, n = A.shape
+    p = -(-m // num_blocks)
+    dense_bytes = 2 * num_blocks * p * n * 4  # blocks + factors, f32
+    if _density(A) <= MATFREE_AUTO_DENSITY and dense_bytes > threshold:
+        return "matfree"
+    return "dense"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +197,8 @@ class PreparedSolver:
     # same request shape hit the XLA executable cache directly
     _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
+    path = "dense"  # the matfree counterpart lives in repro.core.matfree
+
     @property
     def num_blocks(self) -> int:
         return self.blocks.shape[0]
@@ -155,6 +206,22 @@ class PreparedSolver:
     @property
     def num_cols(self) -> int:
         return self.blocks.shape[2]
+
+    @property
+    def memory_bytes(self) -> int:
+        """Device-resident bytes of the cached state (blocks + factors +
+        projector), deduplicated — the cost the LRU pool bounds and the
+        number ``benchmarks/sparse.py`` compares against the matfree path."""
+        arrs = [self.blocks, *jax.tree.leaves(self.factors)]
+        if self.projector:
+            arrs.append(self.projector[1])
+        seen: set[int] = set()
+        total = 0
+        for a in arrs:
+            if hasattr(a, "nbytes") and id(a) not in seen:
+                seen.add(id(a))
+                total += int(a.nbytes)
+        return total
 
     def _consensus_program(self, num_epochs: int, kwargs: dict):
         """Jitted substitution + consensus for the apc/dapc methods.
@@ -262,20 +329,33 @@ class PreparedSolver:
 
 
 def prepare(
-    A: np.ndarray,
+    A,  # dense (m, n) array or host COOMatrix
     method: str = "dapc",
     num_blocks: int = 8,
-    mode: BlockMode = "auto",
+    mode: str = "auto",  # BlockMode | "dense" | "matfree"
     dtype=None,
     gamma: float = 1.0,
     eta: float = 0.9,
     materialize_p: bool = True,
     use_kernels: bool = False,
-) -> PreparedSolver:
+    block_shape: tuple[int, int] | None = None,
+    inner_iters: int | None = None,
+    inner_tol: float = 1e-6,
+    matfree_threshold_bytes: int | None = None,
+):  # -> PreparedSolver | repro.core.matfree.MatrixFreePreparedSolver
     """Algorithm 1 steps 1–4, b-independent: partition A, factorize every
     block, build the jitted projector. Returns the reusable PreparedSolver.
 
-    Cached per method:
+    ``mode`` selects the execution path on top of the block regime:
+    tall/wide/auto keep their dense-path meaning; ``"dense"`` forces the
+    densified path with auto block regime; ``"matfree"`` returns a
+    ``MatrixFreePreparedSolver`` (sparse blocked-ELL operator + inner-CG
+    projections, never densifying a block); ``"auto"`` also picks matfree
+    when the nnz/memory estimate says the dense blocks would not pay off
+    (``resolve_path``). ``block_shape``/``inner_iters``/``inner_tol`` only
+    apply to the matfree path.
+
+    Cached per method (dense path):
       * dapc — (W_j, R_j) reduced-QR factors (paper eqs. 1/4);
       * apc  — (A_j⁺, P_j) pseudoinverse + dense projector (the classical
                setup the paper's decomposition replaces);
@@ -284,8 +364,24 @@ def prepare(
     """
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
+    path = resolve_path(A, num_blocks, mode, matfree_threshold_bytes)
+    if path == "matfree" and mode == "auto" and method not in ("apc", "dapc"):
+        path = "dense"  # matfree covers the consensus methods only; auto
+        # must not turn a working dgd/cgnr solve into an error
+    if path == "matfree":
+        from repro.core import matfree  # deferred: matfree imports SolveResult
+
+        kw = {} if block_shape is None else {"block_shape": tuple(block_shape)}
+        return matfree.prepare_matfree(
+            A, method=method, num_blocks=num_blocks, dtype=dtype,
+            gamma=gamma, eta=eta, inner_iters=inner_iters,
+            inner_tol=inner_tol, use_kernels=use_kernels, **kw,
+        )
+    if isinstance(A, COOMatrix):
+        A = A.to_dense()  # the dense path's per-block decompress, up front
+    block_mode: BlockMode = mode if mode in ("tall", "wide") else "auto"
     t0 = time.perf_counter()
-    blocks, resolved, mixer = partition_matrix(A, num_blocks, mode, dtype)
+    blocks, resolved, mixer = partition_matrix(A, num_blocks, block_mode, dtype)
 
     factors: tuple = ()
     projector: tuple = ()

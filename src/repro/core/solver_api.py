@@ -17,11 +17,18 @@ from repro.core.prepared import (  # noqa: F401  (re-exported API)
     PreparedSolver,
     SolveResult,
     prepare,
+    resolve_path,
 )
-from repro.core.partition import BlockMode
 
 # kwargs consumed at prepare() time; everything else forwards to the method
-_PREPARE_KWARGS = ("materialize_p", "use_kernels")
+_PREPARE_KWARGS = (
+    "materialize_p",
+    "use_kernels",
+    "block_shape",
+    "inner_iters",
+    "inner_tol",
+    "matfree_threshold_bytes",
+)
 
 
 def solve(
@@ -32,7 +39,7 @@ def solve(
     num_epochs: int = 100,
     gamma: float = 1.0,
     eta: float = 0.9,
-    mode: BlockMode = "auto",
+    mode: str = "auto",  # BlockMode | "dense" | "matfree"
     x_ref=None,
     dtype=None,
     **kwargs,
@@ -45,6 +52,10 @@ def solve(
 
     ``b`` may be one RHS (m,) or a column batch (m, k) — the batch solves
     all k systems in one compiled program.
+
+    ``A`` may be a host ``COOMatrix``; ``mode`` additionally accepts
+    ``"dense"``/``"matfree"`` to pin the execution path (``"auto"`` picks
+    matfree past the nnz/memory threshold — see ``prepare``).
 
     kwargs are forwarded to the method (e.g. ``materialize_p=False`` /
     ``use_kernels=True`` for dapc, ``lr=`` for dgd).

@@ -6,6 +6,10 @@ The paper optimizes exactly two per-worker operations (Algorithm 1):
     -- ``project/`` (fused ``x + gamma*(I - W^T W)(xbar - x)``, never
     materializing P)
 
+The matrix-free sparse path adds a third:
+  * blocked-ELL SpMM -- ``spmm/`` (scalar-prefetch tile gather; the A_j x /
+    A_j^T y products the inner-CG projections are built from)
+
 Each kernel ships ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd padded wrapper, interpret=True on CPU) and ``ref.py`` (pure-jnp
 oracle used by the allclose test sweeps).

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper around the blocked-ELL SpMM kernel.
+
+Takes the stacked-shard tile view that ``repro.sparse.bsr`` produces
+((J, C, bn, k) column tiles), selects interpret mode off-TPU, and casts the
+f32 accumulator back to the operand dtype. The gather itself costs nothing
+extra here — the tile-id table is a scalar-prefetch operand and every x
+tile is DMA'd straight from its gathered column block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm import spmm as _kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spmm(
+    indices: jnp.ndarray,  # (J, R, S) int32
+    data: jnp.ndarray,  # (J, R, S, bp, bn)
+    x: jnp.ndarray,  # (J, C, bn, k) tile view (see bsr._pad_cols)
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Blocked-ELL SpMM: returns (J, R*bp, k) in the data dtype."""
+    if interpret is None:
+        interpret = _interpret_default()
+    J, R, _ = indices.shape
+    bp = data.shape[-2]
+    out = _kernel.spmm_padded(indices, data, x, interpret=bool(interpret))
+    return out.reshape(J, R * bp, -1).astype(data.dtype)

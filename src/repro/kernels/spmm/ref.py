@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the blocked-ELL SpMM — densifies every shard and
+multiplies, exactly what the matfree path exists to avoid."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def blocked_ell_to_dense(
+    indices: jnp.ndarray,  # (R, S) int32
+    data: jnp.ndarray,  # (R, S, bp, bn)
+    num_col_blocks: int,
+) -> jnp.ndarray:
+    """One shard densified to (R*bp, num_col_blocks*bn)."""
+    R, S = indices.shape
+    bp, bn = data.shape[-2:]
+    out = jnp.zeros((R, num_col_blocks, bp, bn), jnp.float32)
+    r = jnp.repeat(jnp.arange(R), S)
+    # padding slots (id 0, zero data) add exactly 0 — scatter-add is safe
+    out = out.at[r, indices.ravel()].add(
+        data.reshape(R * S, bp, bn).astype(jnp.float32)
+    )
+    return out.transpose(0, 2, 1, 3).reshape(R * bp, num_col_blocks * bn)
+
+
+def spmm_ref(
+    indices: jnp.ndarray,  # (J, R, S)
+    data: jnp.ndarray,  # (J, R, S, bp, bn)
+    x: jnp.ndarray,  # (J, C, bn, k)
+) -> jnp.ndarray:
+    """Dense reference of ``spmm_padded``: (J, R*bp, k) f32."""
+    C = x.shape[1]
+
+    def one(idx_j, data_j, x_j):
+        dense = blocked_ell_to_dense(idx_j, data_j, C)
+        return dense @ x_j.reshape(-1, x_j.shape[-1]).astype(jnp.float32)
+
+    return jax.vmap(one)(indices, data, x)

@@ -1,0 +1,72 @@
+"""Blocked-ELL SpMM Pallas kernel (the matfree path's A_j x / A_jᵀ y).
+
+Layout (repro.sparse.bsr): per shard j, block-row r stores S dense
+``(bp, bn)`` tiles and the column-block id of each (padding slots: id 0,
+zero data). The product is
+
+  out[j, r] = Σ_s data[j, r, s] @ x[j, indices[j, r, s]]
+
+TPU mapping: grid ``(J, R, S)`` with the tile-id table as a SCALAR-PREFETCH
+operand (``pltpu.PrefetchScalarGridSpec``) so each grid step's x tile is
+DMA'd from the gathered column block — the indices drive the BlockSpec
+index_map, the kernel body never sees them. The output block (one
+``(bp, k)`` row stripe) is revisited across the s axis (innermost grid
+dim), accumulating in VMEM in f32 and initialized at s == 0.
+
+Padding slots multiply a zero tile against column block 0 — they add
+exactly 0.0, so no masking is needed anywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(idx_ref, data_ref, x_ref, o_ref):
+    """Grid (J, R, S): accumulate one tile product into the row stripe."""
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = data_ref[0, 0, 0].astype(jnp.float32)  # (bp, bn)
+    xb = x_ref[0, 0].astype(jnp.float32)  # (bn, k)
+    o_ref[0, 0] += jnp.dot(w, xb, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmm_padded(
+    indices: jnp.ndarray,  # (J, R, S) int32 column-block ids
+    data: jnp.ndarray,  # (J, R, S, bp, bn)
+    x: jnp.ndarray,  # (J, C, bn, k) tile view of the column space
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (J, R, bp, k) f32 — caller reshapes/casts."""
+    J, R, S = indices.shape
+    bp, bn = data.shape[-2:]
+    k = x.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(J, R, S),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, 1, bp, bn), lambda j, r, s, idx: (j, r, s, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bn, k), lambda j, r, s, idx: (j, idx[j, r, s], 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bp, k), lambda j, r, s, idx: (j, r, 0, 0)),
+    )
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((J, R, bp, k), jnp.float32),
+        interpret=interpret,
+    )(indices, data, x)

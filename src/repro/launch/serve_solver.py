@@ -38,12 +38,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--pool-size", type=int, default=4)
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "dense", "matfree"),
+                    help="execution path for pooled systems (auto = "
+                         "nnz/memory estimate per system)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
 
 def main(argv=None) -> None:
-    args = build_parser().parse_args(argv)
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    if args.mode == "matfree" and args.method not in ("apc", "dapc"):
+        ap.error("--mode matfree supports the consensus methods (apc/dapc)")
 
     from repro.serving.queue import ServerStats, SolveServer, replay_trace
     from repro.sparse import make_problem
@@ -64,19 +71,21 @@ def main(argv=None) -> None:
             pool_size=args.pool_size,
             prepare_kwargs=dict(
                 method=args.method, num_blocks=args.num_blocks,
-                materialize_p=False,
+                materialize_p=False, mode=args.mode,
             ),
         ) as server:
-            fp = server.register(prob.A)
+            # register the sparse COO for square systems (the matfree path
+            # then never densifies); augmented systems are dense by nature
+            fp = server.register(prob.coo if args.m == args.n else prob.A)
             # warm the compiled programs so the trace measures steady state
             await server.submit(fp, rhs[:, 0])
             server.stats = ServerStats()  # report the trace, not the warm-up
             t0 = time.perf_counter()
             results = await replay_trace(server, fp, rhs, gaps)
             wall = time.perf_counter() - t0
-            return server, results, wall
+            return server, results, wall, server.pool.resident()
 
-    server, results, wall = asyncio.run(serve())
+    server, results, wall, resident = asyncio.run(serve())
 
     lat_ms = np.array([r.queue_ms + r.solve_ms for r in results])
     err = max(
@@ -110,6 +119,12 @@ def main(argv=None) -> None:
         f"accuracy: max|x - x_true| = {err:.2e}; "
         f"unconverged columns (tol={args.tol:g}): {unconverged}"
     )
+    for entry in resident:  # which execution path each pooled system used
+        print(
+            f"pool: system {entry['fingerprint']} path={entry['path']} "
+            f"factors={entry['memory_bytes'] / 1e6:.2f}MB "
+            f"solves={entry['num_solves']}"
+        )
 
 
 if __name__ == "__main__":

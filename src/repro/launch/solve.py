@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--rhs", type=int, default=1,
                     help="number of right-hand sides solved as one batch "
                          "against the prepared factorization")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "dense", "matfree"],
+                    help="execution path: dense blocks, matrix-free sparse "
+                         "operator, or auto (nnz/memory estimate)")
     ap.add_argument("--implicit-p", action="store_true",
                     help="beyond-paper: never materialize the projector")
     ap.add_argument("--kernels", action="store_true",
@@ -39,8 +43,11 @@ def main():
     kw = {}
     if args.method == "dapc":
         kw = {"materialize_p": not args.implicit_p, "use_kernels": args.kernels}
+    # square systems stay sparse end to end: hand prepare the COO so the
+    # matfree path (picked or forced) never sees a dense copy
+    A = prob.coo if prob.shape[0] == prob.shape[1] else prob.A
     prep = prepare(
-        prob.A, method=args.method, num_blocks=args.blocks,
+        A, method=args.method, num_blocks=args.blocks, mode=args.mode,
         gamma=args.gamma, eta=args.eta, **kw,
     )
     if args.rhs > 1:

@@ -38,17 +38,24 @@ import numpy as np
 
 from repro.core import prepare
 from repro.core.prepared import PreparedSolver
+from repro.sparse.matrix import COOMatrix
 
 
-def matrix_fingerprint(A: np.ndarray) -> str:
+def matrix_fingerprint(A: np.ndarray | COOMatrix) -> str:
     """Content hash identifying a system matrix across requests.
 
-    Hashes shape + dtype + raw bytes; computed once at ``register`` time
-    (never per request), so the O(mn) pass is part of the setup cost the
-    pool amortizes, like the QR itself.
+    Hashes shape + dtype + raw bytes (for a ``COOMatrix``: the coordinate
+    triplets, so a sparse registration never densifies); computed once at
+    ``register`` time (never per request), so the O(mn) — O(nnz) sparse —
+    pass is part of the setup cost the pool amortizes, like the QR itself.
     """
-    A = np.ascontiguousarray(A)
     h = hashlib.sha1()
+    if isinstance(A, COOMatrix):
+        h.update(repr(("coo", A.shape, A.vals.dtype.str)).encode())
+        for arr in (A.rows, A.cols, A.vals):
+            h.update(np.ascontiguousarray(arr).tobytes())
+        return h.hexdigest()[:16]
+    A = np.ascontiguousarray(A)
     h.update(repr((A.shape, A.dtype.str)).encode())
     h.update(A.tobytes())
     return h.hexdigest()[:16]
@@ -63,6 +70,12 @@ class PoolStats:
 
 class PreparedPool:
     """LRU-bounded ``{fingerprint: PreparedSolver}`` with a side registry.
+
+    Entries may be dense ``PreparedSolver``s or matfree
+    ``MatrixFreePreparedSolver``s side by side (both honor the same
+    ``solve``/``num_solves`` contract; ``resident()`` reports which path
+    each pooled system took) — register with ``mode="matfree"`` or a
+    sparse enough matrix under ``mode="auto"`` to get the sparse kind.
 
     The registry keeps the raw (A, prepare-kwargs) per fingerprint so an
     evicted entry can be re-prepared on demand — eviction drops the
@@ -85,15 +98,21 @@ class PreparedPool:
         self._lock = threading.Lock()
         self.stats = PoolStats()
 
-    def register(self, A: np.ndarray, **prepare_kwargs) -> str:
+    def register(self, A: np.ndarray | COOMatrix, **prepare_kwargs) -> str:
         """Record a system for later ``get``s; returns its fingerprint.
 
-        Idempotent — re-registering the same matrix returns the same
-        fingerprint and keeps the first registration's kwargs.
+        ``A`` may be a host ``COOMatrix`` — registered and fingerprinted
+        without densifying, so a matfree-prepared system never pays the
+        O(mn) dense copy at all. Idempotent — re-registering the same
+        matrix returns the same fingerprint and keeps the first
+        registration's kwargs.
         """
-        A = np.asarray(A)
-        if A.ndim != 2:
-            raise ValueError(f"expected a 2D system matrix, got shape {A.shape}")
+        if not isinstance(A, COOMatrix):
+            A = np.asarray(A)
+            if A.ndim != 2:
+                raise ValueError(
+                    f"expected a 2D system matrix, got shape {A.shape}"
+                )
         fp = matrix_fingerprint(A)
         with self._lock:
             self._systems.setdefault(
@@ -127,6 +146,21 @@ class PreparedPool:
                 self._lru.popitem(last=False)
                 self.stats.evictions += 1
         return prep
+
+    def resident(self) -> list[dict]:
+        """Snapshot of the pooled solvers: fingerprint, execution path
+        (dense/matfree), resident factor bytes, and solve count per entry
+        — LRU order, coldest first (observability for the serving layer)."""
+        with self._lock:
+            return [
+                {
+                    "fingerprint": fp,
+                    "path": prep.path,
+                    "memory_bytes": prep.memory_bytes,
+                    "num_solves": prep.num_solves,
+                }
+                for fp, prep in self._lru.items()
+            ]
 
     def __contains__(self, fingerprint: str) -> bool:
         with self._lock:

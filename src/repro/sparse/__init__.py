@@ -5,6 +5,7 @@ from repro.sparse.matrix import (
     make_row_mixer,
     matrix_stats,
 )
+from repro.sparse.bsr import BlockEll, PartitionedBSR
 from repro.sparse.io import (
     generate_schenk_like,
     augment_system,
@@ -16,6 +17,8 @@ from repro.sparse.io import (
 __all__ = [
     "COOMatrix",
     "RowMixer",
+    "BlockEll",
+    "PartitionedBSR",
     "block_rows",
     "make_row_mixer",
     "matrix_stats",

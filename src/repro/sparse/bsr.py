@@ -1,0 +1,510 @@
+"""Device-resident blocked-sparse (blocked-ELL / BSR) format.
+
+The dense path decompresses every row block to a dense ``(p, n)`` array
+before QR (``COOMatrix.row_block``), so its memory scales as O(J·p·n)
+regardless of sparsity — at the paper's Schenk_IBMNA sparsity (~99.85%)
+that is ~700x more than the nonzeros need. This module keeps the matrix
+blocked-sparse ON DEVICE:
+
+  * ``BlockEll`` — a padded blocked-ELL layout: the rows are cut into
+    ``bp``-row block-rows, each storing a fixed number ``S`` of dense
+    ``(bp, bn)`` tiles plus the column-block index of every tile.
+    ``S`` is the maximum tile count over block-rows; short rows are padded
+    with index-0 tiles whose data is all zero, so padding contributes
+    nothing to a product (padding-aware indexing, no masks needed).
+  * ``BlockEll.slice_row_blocks`` — per-row-block slicing as a pure array
+    slice of ``(indices, data)``; a worker's shard is carved out without
+    ever materializing a dense block.
+  * ``PartitionedBSR`` — the J-way row partition of a ``COOMatrix`` as
+    stacked blocked-ELL shards for A_j and A_jᵀ, with the SpMM/SpMV
+    contractions (gather + einsum by default, the Pallas kernel under
+    ``use_kernels=True``) that the matrix-free solver builds its
+    projections from (``repro.core.matfree``).
+
+The uniform partition pads each block to ``p_pad`` rows with ZERO rows
+(b is padded with zeros at the same positions): a zero row is the trivially
+consistent equation 0·x = 0, so the block's solution set — and therefore
+its projection — is unchanged, and no dense mixing rows are needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.matrix import COOMatrix
+
+DEFAULT_BLOCK_SHAPE = (8, 8)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _ell_arrays(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    m: int,
+    n: int,
+    bp: int,
+    bn: int,
+    dtype,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side COO -> blocked-ELL (indices (R, S), data (R, S, bp, bn)).
+
+    ``S`` is max(nonzero tiles per block-row, 1) — even an all-zero matrix
+    keeps one (zero) padding slot so downstream shapes stay static.
+    Duplicate (row, col) entries resolve last-wins, matching
+    ``COOMatrix.to_dense``'s scatter semantics.
+    """
+    R, C = _ceil_div(m, bp), _ceil_div(n, bn)
+    if rows.size == 0:  # empty (or empty-slice) matrix: one zero pad slot
+        return (
+            np.zeros((R, 1), np.int32),
+            np.zeros((R, 1, bp, bn), dtype),
+        )
+    br, bc = rows // bp, cols // bn
+    order = np.lexsort((cols, rows))  # stable: later duplicates win
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    br, bc = br[order], bc[order]
+    key = br.astype(np.int64) * C + bc
+    ukey, inv = np.unique(key, return_inverse=True)
+    ubr, ubc = (ukey // C).astype(np.int64), (ukey % C).astype(np.int64)
+    per_row = np.bincount(ubr, minlength=R)
+    starts = np.concatenate(([0], np.cumsum(per_row)))[:-1]
+    slot = np.arange(ukey.size) - starts[ubr]  # rank of tile within its row
+    S = max(int(per_row.max()), 1)
+    indices = np.zeros((R, S), np.int32)
+    indices[ubr, slot] = ubc
+    data = np.zeros((R, S, bp, bn), dtype)
+    data[br, slot[inv], rows % bp, cols % bn] = vals
+    return indices, data
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockEll:
+    """Blocked-ELL matrix: (R, S) tile indices + (R, S, bp, bn) tile data.
+
+    Logical shape is ``shape``; rows/cols are zero-padded up to the tile
+    grid (``R*bp``, ``C*bn``). Padding slots carry index 0 and zero data.
+    """
+
+    indices: jnp.ndarray  # (R, S) int32 column-block ids
+    data: jnp.ndarray  # (R, S, bp, bn)
+    shape: tuple[int, int]  # logical (m, n)
+
+    @property
+    def block_shape(self) -> tuple[int, int]:
+        return tuple(self.data.shape[-2:])
+
+    @property
+    def num_block_rows(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.indices.nbytes + self.data.nbytes)
+
+    @property
+    def dense_bytes(self) -> int:
+        """What a densified copy of the logical matrix would cost."""
+        m, n = self.shape
+        return int(m * n * self.data.dtype.itemsize)
+
+    @staticmethod
+    def from_coo(
+        coo: COOMatrix,
+        block_shape: tuple[int, int] = DEFAULT_BLOCK_SHAPE,
+        dtype=np.float32,
+    ) -> "BlockEll":
+        """Convert host COO to device blocked-ELL."""
+        m, n = coo.shape
+        bp, bn = block_shape
+        idx, data = _ell_arrays(
+            coo.rows.astype(np.int64), coo.cols.astype(np.int64),
+            coo.vals, m, n, bp, bn, np.dtype(dtype),
+        )
+        return BlockEll(jnp.asarray(idx), jnp.asarray(data), (m, n))
+
+    def slice_row_blocks(self, start: int, stop: int) -> "BlockEll":
+        """Rows [start, stop) as a new BlockEll — a pure array slice.
+
+        Both bounds must sit on block-row boundaries; nothing is densified
+        and the tile data is shared (a jnp slice) with the parent.
+        """
+        bp = self.block_shape[0]
+        if start % bp or stop % bp:
+            raise ValueError(
+                f"slice bounds ({start}, {stop}) must be multiples of bp={bp}"
+            )
+        r0, r1 = start // bp, stop // bp
+        if not 0 <= r0 <= r1 <= self.num_block_rows:
+            raise ValueError(f"slice ({start}, {stop}) out of range")
+        return BlockEll(
+            self.indices[r0:r1], self.data[r0:r1], (stop - start, self.shape[1])
+        )
+
+    def matmul(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Blocked-ELL @ x for x (n, k); returns (R*bp, k) (padded rows kept)."""
+        xb = _pad_cols(x, self.shape[1], self.block_shape[1])
+        return _ell_matmul(self.indices, self.data, xb)
+
+    def to_dense(self) -> np.ndarray:
+        """Densify (tests/debug only) — the logical (m, n) matrix."""
+        idx = np.asarray(self.indices)
+        data = np.asarray(self.data)
+        R, S = idx.shape
+        bp, bn = data.shape[-2:]
+        C = _ceil_div(self.shape[1], bn)
+        out = np.zeros((R, C, bp, bn), data.dtype)
+        r = np.repeat(np.arange(R), S)
+        # padding slots all target block 0 with zero data: += keeps them inert
+        np.add.at(out, (r, idx.ravel()), data.reshape(R * S, bp, bn))
+        dense = out.transpose(0, 2, 1, 3).reshape(R * bp, C * bn)
+        return dense[: self.shape[0], : self.shape[1]]
+
+
+def _pad_cols(x: jnp.ndarray, n: int, bn: int) -> jnp.ndarray:
+    """(n, k) -> (C, bn, k) tile view of the zero-padded column space."""
+    n_pad = _ceil_div(n, bn) * bn
+    x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    return x.reshape(n_pad // bn, bn, x.shape[-1])
+
+
+def _ell_matmul(indices, data, xb):
+    """One shard: indices (R, S), data (R, S, bp, bn), xb (C, bn, k)."""
+    g = xb[indices]  # gather: (R, S, bn, k)
+    out = jnp.einsum("rspb,rsbk->rpk", data, g)
+    R, _, bp, _ = data.shape
+    return out.reshape(R * bp, -1).astype(data.dtype)
+
+
+@jax.jit
+def _ell_matmul_stacked(indices, data, xb):
+    """J stacked shards: (J, R, S), (J, R, S, bp, bn), (J, C, bn, k)."""
+    return jax.vmap(_ell_matmul)(indices, data, xb)
+
+
+def _ell_rmatmul(indices, data, yb, num_col_blocks):
+    """Transposed product from the FORWARD layout, one shard.
+
+    indices (R, S), data (R, S, bp, bn), yb (R, bp, k) -> (C*bn, k):
+    each tile contributes dataᵀ @ y_rowtile, scatter-added into its column
+    block. Padding slots target block 0 with zero data — they add 0.
+    """
+    contrib = jnp.einsum("rspb,rpk->rsbk", data, yb)
+    C = num_col_blocks
+    out = jnp.zeros((C, *contrib.shape[-2:]), data.dtype)
+    out = out.at[indices].add(contrib)
+    return out.reshape(C * contrib.shape[-2], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_col_blocks",))
+def _ell_rmatmul_stacked(indices, data, yb, num_col_blocks):
+    return jax.vmap(
+        lambda i, d, y: _ell_rmatmul(i, d, y, num_col_blocks)
+    )(indices, data, yb)
+
+
+def _gram_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
+    """Host-side COO of G = A Aᵀ for one sparse block.
+
+    G[i, i'] = Σ_c A[i, c] A[i', c]: group the entries by column; every
+    column with t entries contributes a t×t outer product. Schenk-like
+    blocks share few columns across rows, so the pair count stays near the
+    diagonal's. Duplicate coordinates are pre-summed (``_ell_arrays``
+    assigns last-wins, which would drop accumulations otherwise).
+    """
+    order = np.argsort(cols, kind="stable")
+    r, c, v = rows[order], cols[order], vals[order]
+    gi, gj, gv = [np.empty(0, np.int64)], [np.empty(0, np.int64)], [np.empty(0)]
+    if c.size:
+        starts = np.flatnonzero(np.r_[True, c[1:] != c[:-1]])
+        ends = np.r_[starts[1:], c.size]
+        sizes = ends - starts
+        single = sizes == 1
+        s1 = starts[single]
+        gi.append(r[s1])
+        gj.append(r[s1])
+        gv.append(v[s1] ** 2)
+        for s, e in zip(starts[~single], ends[~single]):
+            t = e - s
+            gi.append(np.repeat(r[s:e], t))
+            gj.append(np.tile(r[s:e], t))
+            gv.append(np.outer(v[s:e], v[s:e]).ravel())
+    gi, gj, gv = map(np.concatenate, (gi, gj, gv))
+    if gi.size == 0:
+        return gi, gj, gv
+    p_span = int(gi.max()) + 1
+    key = gi * p_span + gj
+    ukey, inv = np.unique(key, return_inverse=True)
+    summed = np.zeros(ukey.size, gv.dtype)
+    np.add.at(summed, inv, gv)
+    return ukey // p_span, ukey % p_span, summed
+
+
+def _stack_shards(shards: list[tuple[np.ndarray, np.ndarray]]):
+    """Pad per-shard ELL arrays to a common slot count and stack to device."""
+    S = max(idx.shape[1] for idx, _ in shards)
+    J, R = len(shards), shards[0][0].shape[0]
+    tile = shards[0][1].shape[-2:]
+    idx_out = np.zeros((J, R, S), np.int32)
+    data_out = np.zeros((J, R, S, *tile), shards[0][1].dtype)
+    for j, (idx, data) in enumerate(shards):
+        idx_out[j, :, : idx.shape[1]] = idx
+        data_out[j, :, : idx.shape[1]] = data
+    return jnp.asarray(idx_out), jnp.asarray(data_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedBSR:
+    """J-way uniform row partition of a sparse matrix, blocked-ELL per shard.
+
+    ``fwd_*`` holds the A_j shards ((J, Rp, S) tiles of (bp, bn)) — the only
+    mandatory representation: ``rmatvec`` scatter-adds transposed tile
+    products straight from it, so A_jᵀ costs no extra memory by default.
+    ``with_transpose=True`` additionally materializes the A_jᵀ shards
+    (``tra_*``, (J, Rn, T) tiles of (bn, bp)) for the Pallas kernel path,
+    whose gather-driven DMA needs a contiguous streaming layout in both
+    directions. ``with_gram=True`` stores the Gram operators
+    G_j = A_j A_jᵀ as (p, p) blocked-ELL shards (``gram_*``) — near-diagonal
+    for Schenk-like matrices, so they cost a few percent of the forward
+    shards and make each inner-CG iteration one SMALL SpMV instead of two
+    full ones. Blocks are padded to ``p_pad`` rows with zero rows
+    (consistent 0·x = 0 equations; see module docstring).
+    """
+
+    fwd_indices: jnp.ndarray  # (J, Rp, S) int32
+    fwd_data: jnp.ndarray  # (J, Rp, S, bp, bn)
+    shape: tuple[int, int]  # logical (m, n) of the whole system
+    p: int  # logical rows per partition block (ceil(m / J))
+    p_pad: int  # block rows padded to the tile grid
+    tra_indices: jnp.ndarray | None = None  # (J, Rn, T) int32
+    tra_data: jnp.ndarray | None = None  # (J, Rn, T, bn, bp)
+    gram_indices: jnp.ndarray | None = None  # (J, Rp, Sg) int32
+    gram_data: jnp.ndarray | None = None  # (J, Rp, Sg, bp, bp)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.fwd_indices.shape[0]
+
+    @property
+    def num_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def block_shape(self) -> tuple[int, int]:
+        return tuple(self.fwd_data.shape[-2:])
+
+    @property
+    def nbytes(self) -> int:
+        """Device-resident bytes of the sparse operator (all present parts)."""
+        arrs = (
+            self.fwd_indices, self.fwd_data, self.tra_indices, self.tra_data,
+            self.gram_indices, self.gram_data,
+        )
+        return int(sum(a.nbytes for a in arrs if a is not None))
+
+    @property
+    def dense_bytes(self) -> int:
+        """What the dense path's (J, p, n) ``blocks`` array would cost."""
+        return int(
+            self.num_blocks * self.p_pad * self.shape[1]
+            * self.fwd_data.dtype.itemsize
+        )
+
+    @staticmethod
+    def from_coo(
+        coo: COOMatrix,
+        num_blocks: int,
+        block_shape: tuple[int, int] = DEFAULT_BLOCK_SHAPE,
+        dtype=np.float32,
+        with_transpose: bool = False,
+        with_gram: bool = False,
+    ) -> "PartitionedBSR":
+        """Partition + convert, entirely without densifying.
+
+        Builds one global BlockEll over the zero-padded (J·p_pad, n) row
+        space and carves the J forward shards out with
+        ``slice_row_blocks``. ``with_transpose`` adds the A_jᵀ shards (only
+        the Pallas kernel path needs them); ``with_gram`` adds the sparse
+        G_j = A_j A_jᵀ shards (the inner-CG operator).
+        """
+        m, n = coo.shape
+        bp, bn = block_shape
+        J = num_blocks
+        p = _ceil_div(m, J)
+        p_pad = _ceil_div(p, bp) * bp
+        dtype = np.dtype(dtype)
+
+        rows = coo.rows.astype(np.int64)
+        cols = coo.cols.astype(np.int64)
+        vals = coo.vals
+        # dedupe coordinates up front (last-wins, matching to_dense): the
+        # Gram builder SUMS per-coordinate contributions, so duplicates
+        # must be resolved once here or the inner-CG operator would
+        # disagree with the forward shards
+        if rows.size:
+            key = rows * n + cols
+            order = np.argsort(key, kind="stable")
+            keep = np.ones(order.size, dtype=bool)
+            keep[:-1] = key[order][1:] != key[order][:-1]
+            sel = order[keep]
+            rows, cols, vals = rows[sel], cols[sel], vals[sel]
+        coo = COOMatrix(rows, cols, vals, (m, n))
+        blk = rows // p
+        local = rows % p
+        # global padded layout: block j owns rows [j*p_pad, j*p_pad + p)
+        padded = COOMatrix(
+            (blk * p_pad + local).astype(np.int64), cols, coo.vals, (J * p_pad, n)
+        )
+        full = BlockEll.from_coo(padded, block_shape, dtype)
+        shards = [
+            full.slice_row_blocks(j * p_pad, (j + 1) * p_pad) for j in range(J)
+        ]
+        # shards of one parent share S, so they stack without re-padding
+        fwd_idx = jnp.stack([s.indices for s in shards])
+        fwd_data = jnp.stack([s.data for s in shards])
+
+        tra_idx = tra_data = None
+        if with_transpose:
+            tra_idx, tra_data = _stack_shards(
+                [
+                    _ell_arrays(
+                        cols[blk == j], local[blk == j], coo.vals[blk == j],
+                        n, p_pad, bn, bp, dtype,
+                    )
+                    for j in range(J)
+                ]
+            )
+
+        gram_idx = gram_data = None
+        if with_gram:
+            gram_idx, gram_data = _stack_shards(
+                [
+                    _ell_arrays(
+                        *_gram_coo(
+                            local[blk == j], cols[blk == j], coo.vals[blk == j]
+                        ),
+                        p_pad, p_pad, bp, bp, dtype,
+                    )
+                    for j in range(J)
+                ]
+            )
+
+        return PartitionedBSR(
+            fwd_idx, fwd_data, (m, n), p, p_pad,
+            tra_indices=tra_idx, tra_data=tra_data,
+            gram_indices=gram_idx, gram_data=gram_data,
+        )
+
+    # -- products -----------------------------------------------------------
+
+    def matvec(self, x: jnp.ndarray, use_kernels: bool = False) -> jnp.ndarray:
+        """A_j x_j for every block: x (J, n, k) — or (n, k), broadcast to all
+        blocks — returns (J, p_pad, k). Padded rows come back exactly zero."""
+        J, n = self.num_blocks, self.shape[1]
+        if x.ndim == 2:
+            x = jnp.broadcast_to(x[None], (J, *x.shape))
+        xb = jax.vmap(lambda v: _pad_cols(v, n, self.block_shape[1]))(x)
+        if use_kernels:
+            from repro.kernels.spmm import ops as spmm_ops
+
+            return spmm_ops.spmm(self.fwd_indices, self.fwd_data, xb)
+        return _ell_matmul_stacked(self.fwd_indices, self.fwd_data, xb)
+
+    def rmatvec(self, y: jnp.ndarray, use_kernels: bool = False) -> jnp.ndarray:
+        """A_jᵀ y_j for every block: y (J, p_pad, k) -> (J, n, k).
+
+        Runs off the transposed shards when they are materialized (the
+        kernel path requires them); otherwise scatter-adds transposed tile
+        products straight from the forward shards — zero extra memory.
+        """
+        n = self.shape[1]
+        bp, bn = self.block_shape
+        if use_kernels or self.tra_indices is not None:
+            if self.tra_indices is None:
+                raise ValueError(
+                    "kernel rmatvec needs the transposed shards: build with "
+                    "PartitionedBSR.from_coo(..., with_transpose=True)"
+                )
+            xb = jax.vmap(lambda v: _pad_cols(v, self.p_pad, bp))(y)
+            if use_kernels:
+                from repro.kernels.spmm import ops as spmm_ops
+
+                out = spmm_ops.spmm(self.tra_indices, self.tra_data, xb)
+            else:
+                out = _ell_matmul_stacked(self.tra_indices, self.tra_data, xb)
+            return out[:, :n]
+        J = self.num_blocks
+        yb = y.reshape(J, self.p_pad // bp, bp, -1)
+        out = _ell_rmatmul_stacked(
+            self.fwd_indices, self.fwd_data, yb, _ceil_div(n, bn)
+        )
+        return out[:, :n]
+
+    def gram_mv(self, y: jnp.ndarray, use_kernels: bool = False) -> jnp.ndarray:
+        """(A_j A_jᵀ) y_j via the stored sparse Gram shards (or, without
+        them, as rmatvec-then-matvec): (J, p_pad, k) -> (J, p_pad, k)."""
+        if self.gram_indices is None:
+            return self.matvec(self.rmatvec(y, use_kernels), use_kernels)
+        bp = self.block_shape[0]
+        yb = jax.vmap(lambda v: _pad_cols(v, self.p_pad, bp))(y)
+        if use_kernels:
+            from repro.kernels.spmm import ops as spmm_ops
+
+            return spmm_ops.spmm(self.gram_indices, self.gram_data, yb)
+        return _ell_matmul_stacked(self.gram_indices, self.gram_data, yb)
+
+    def gram_diag(self) -> jnp.ndarray:
+        """diag(A_j A_jᵀ) per block — (J, p_pad) row sums of squares, the
+        Jacobi preconditioner for the inner CG (zero on padded rows)."""
+        sq = jnp.sum(self.fwd_data.astype(jnp.float32) ** 2, axis=(2, 4))
+        return sq.reshape(self.num_blocks, self.p_pad)
+
+    def block_rhs(self, b: np.ndarray) -> jnp.ndarray:
+        """RHS (m,) or (m, k) -> (J, p_pad, k), zero-padded like the rows."""
+        b = np.asarray(b)
+        squeeze = b.ndim == 1
+        if squeeze:
+            b = b[:, None]
+        m = self.shape[0]
+        if b.shape[0] != m:
+            raise ValueError(f"expected {m} rows, got {b.shape[0]}")
+        out = np.zeros(
+            (self.num_blocks * self.p_pad, b.shape[1]), self.fwd_data.dtype
+        )
+        rows = np.arange(m)
+        out[(rows // self.p) * self.p_pad + rows % self.p] = b
+        return jnp.asarray(out.reshape(self.num_blocks, self.p_pad, -1))
+
+
+def _bsr_flatten(op: PartitionedBSR):
+    children = (
+        op.fwd_indices, op.fwd_data, op.tra_indices, op.tra_data,
+        op.gram_indices, op.gram_data,
+    )
+    return children, (op.shape, op.p, op.p_pad)
+
+
+def _bsr_unflatten(aux, children):
+    shape, p, p_pad = aux
+    fwd_idx, fwd_data, tra_idx, tra_data, gram_idx, gram_data = children
+    return PartitionedBSR(
+        fwd_idx, fwd_data, shape=shape, p=p, p_pad=p_pad,
+        tra_indices=tra_idx, tra_data=tra_data,
+        gram_indices=gram_idx, gram_data=gram_data,
+    )
+
+
+# pytree registration: the operator rides through jax.jit as an operand
+# (arrays traced, shape metadata static), exactly like the dense factors
+jax.tree_util.register_pytree_node(PartitionedBSR, _bsr_flatten, _bsr_unflatten)

@@ -1,9 +1,16 @@
 """Sparse-matrix substrate.
 
-TPUs have no sparse MXU path and the paper itself densifies each row block
-before QR (``.toarray()`` in its Dask implementation), so the substrate keeps a
-COO representation for ingest/generation/statistics and materializes dense
-row blocks per worker shard (DESIGN.md §2).
+``COOMatrix`` is the host-side ingest/generation/statistics format. Two
+compute paths consume it:
+
+  * the **dense** path densifies each row block before QR (``row_block``,
+    mirroring the paper's own ``.toarray()`` in its Dask implementation) —
+    the right call when blocks fit in device memory;
+  * the **matrix-free** path (``repro.sparse.bsr`` + ``repro.core.matfree``)
+    converts to a device-resident blocked-ELL format and applies the block
+    projections via SpMV + inner CG, never materializing a dense block —
+    the path ``prepare(A, mode="auto")`` picks at 99%+ sparsity when the
+    dense blocks would blow the memory budget.
 """
 from __future__ import annotations
 
@@ -27,6 +34,10 @@ class COOMatrix:
         m, n = self.shape
         if self.rows.size and (self.rows.max() >= m or self.cols.max() >= n):
             raise ValueError("index out of bounds for declared shape")
+        if self.rows.size and (self.rows.min() < 0 or self.cols.min() < 0):
+            # negative indices would silently scatter from the end in
+            # to_dense/row_block — reject them at construction
+            raise ValueError("negative indices not allowed")
 
     @property
     def nnz(self) -> int:
@@ -43,7 +54,8 @@ class COOMatrix:
         return out
 
     def row_block(self, start: int, stop: int) -> np.ndarray:
-        """Densify rows [start, stop) — the per-worker decompress step."""
+        """Densify rows [start, stop) — the dense path's per-worker decompress
+        step (the matfree path slices ``repro.sparse.bsr`` blocks instead)."""
         mask = (self.rows >= start) & (self.rows < stop)
         out = np.zeros((stop - start, self.shape[1]), dtype=self.vals.dtype)
         out[self.rows[mask] - start, self.cols[mask]] = self.vals[mask]

@@ -1,0 +1,175 @@
+"""Matrix-free prepared solver: dense-path parity, path selection, serving
+integration (ISSUE 3 tentpole acceptance).
+
+The matfree path applies the SAME consensus iteration as the dense path —
+only the projector application differs (inner CG vs QR factors) — so with
+an accurate inner solve the two trajectories must agree to float tolerance,
+not just both converge.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MatrixFreePreparedSolver,
+    PreparedSolver,
+    prepare,
+    resolve_path,
+    solve,
+)
+from repro.serving.queue import PreparedPool, SolveServer
+from repro.sparse import generate_schenk_like, make_problem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    # square system: the core stays sparse (augmentation would densify it)
+    return make_problem(n=96, m=96, sparsity=0.95, seed=3, dtype=np.float32)
+
+
+@pytest.fixture(scope="module")
+def rhs_batch(problem):
+    rng = np.random.default_rng(17)
+    xs = rng.standard_normal((96, 6)).astype(np.float32)
+    return problem.A @ xs, xs
+
+
+def test_matfree_matches_dense_batched(problem, rhs_batch):
+    """Acceptance: prepare(A, mode='matfree').solve(B) == dense to tol."""
+    B, xs = rhs_batch
+    mf = prepare(problem.coo, mode="matfree", num_blocks=8)
+    dn = prepare(problem.A, mode="dense", num_blocks=8, materialize_p=False)
+    r_mf = mf.solve(B, num_epochs=150)
+    r_dn = dn.solve(B, num_epochs=150)
+    assert r_mf.x.shape == r_dn.x.shape == xs.shape
+    scale = np.abs(r_dn.x).max() + 1e-30
+    assert float(np.abs(r_mf.x - r_dn.x).max() / scale) <= 1e-4
+    # residual histories agree per column as well
+    np.testing.assert_allclose(
+        np.asarray(r_mf.history["residual_sq"]),
+        np.asarray(r_dn.history["residual_sq"]),
+        rtol=1e-2, atol=1e-4,
+    )
+
+
+def test_matfree_single_rhs_and_accuracy(problem):
+    mf = prepare(problem.coo, mode="matfree", num_blocks=8)
+    dn = prepare(problem.A, mode="dense", num_blocks=8, materialize_p=False)
+    r_mf = mf.solve(problem.b, num_epochs=150, x_ref=problem.x_true)
+    r_dn = dn.solve(problem.b, num_epochs=150, x_ref=problem.x_true)
+    assert r_mf.x.shape == (96,)
+    np.testing.assert_allclose(r_mf.x, r_dn.x, atol=1e-4)
+    assert np.asarray(r_mf.history["mse"]).shape == (150,)
+
+
+def test_matfree_from_dense_array_matches_coo(problem, rhs_batch):
+    """A dense ndarray input converts internally — same result as COO."""
+    B, _ = rhs_batch
+    a = prepare(problem.coo, mode="matfree", num_blocks=8).solve(B, 40)
+    b = prepare(
+        problem.A.astype(np.float32), mode="matfree", num_blocks=8
+    ).solve(B, 40)
+    np.testing.assert_allclose(a.x, b.x, atol=1e-5)
+
+
+def test_matfree_inner_iterations_surfaced(problem, rhs_batch):
+    B, xs = rhs_batch
+    mf = prepare(problem.coo, mode="matfree", num_blocks=8)
+    res = mf.solve(B, num_epochs=30)
+    inner = np.asarray(res.history["inner_iters"])
+    assert inner.shape == (30, xs.shape[1])  # per epoch, per column
+    assert inner.min() >= 1 and inner.max() <= mf.inner_iters
+    # the setup substitution reports its inner depth too
+    assert np.asarray(res.history["initial"]["inner_iters"]).shape == (6,)
+    # per-column scatter still works on matfree results
+    cols = res.per_column(tol=1e3)
+    assert len(cols) == xs.shape[1]
+    assert all(c.x.shape == (96,) for c in cols)
+
+
+def test_matfree_rejects_non_consensus_methods(problem):
+    with pytest.raises(ValueError, match="consensus"):
+        prepare(problem.coo, mode="matfree", method="cgnr")
+
+
+def test_auto_keeps_non_consensus_methods_dense():
+    """Regression: mode='auto' past the matfree thresholds must fall back
+    to dense for dgd/cgnr instead of raising."""
+    coo = generate_schenk_like(256, sparsity=0.9985, seed=1)
+    for method in ("cgnr", "dgd"):
+        prep = prepare(
+            coo, method=method, mode="auto", num_blocks=8,
+            matfree_threshold_bytes=0,
+        )
+        assert isinstance(prep, PreparedSolver)
+
+
+def test_resolve_path_auto_rules(problem):
+    # small + not sparse enough: stays dense whatever the threshold
+    assert resolve_path(problem.A, 8, "auto") == "dense"
+    assert resolve_path(problem.A, 8, "auto", matfree_threshold_bytes=0) == "dense"
+    # 99.85% sparse + tiny threshold: auto goes matfree
+    coo = generate_schenk_like(256, sparsity=0.9985, seed=1)
+    assert resolve_path(coo, 8, "auto", matfree_threshold_bytes=0) == "matfree"
+    # ... but an explicit mode always wins
+    assert resolve_path(coo, 8, "dense", matfree_threshold_bytes=0) == "dense"
+    assert resolve_path(problem.A, 8, "matfree") == "matfree"
+    # default threshold keeps small systems dense even at high sparsity
+    assert resolve_path(coo, 8, "auto") == "dense"
+    with pytest.raises(ValueError, match="mode"):
+        resolve_path(problem.A, 8, "bogus")
+
+
+def test_prepare_auto_picks_matfree_past_threshold():
+    coo = generate_schenk_like(256, sparsity=0.9985, seed=1)
+    prep = prepare(coo, mode="auto", num_blocks=8, matfree_threshold_bytes=0)
+    assert isinstance(prep, MatrixFreePreparedSolver)
+    assert prep.path == "matfree" and prep.mode == "matfree"
+    dense = prepare(coo, mode="auto", num_blocks=8)  # default 64 MiB floor
+    assert isinstance(dense, PreparedSolver)
+    # the sparse operator really is smaller than the dense factors
+    assert prep.memory_bytes * 5 < dense.memory_bytes
+
+
+def test_one_shot_solve_threads_mode(problem, rhs_batch):
+    B, _ = rhs_batch
+    res = solve(problem.coo, B, mode="matfree", num_blocks=8, num_epochs=40)
+    assert res.mode == "matfree"
+    ref = solve(problem.A, B, mode="dense", num_blocks=8, num_epochs=40,
+                materialize_p=False)
+    np.testing.assert_allclose(res.x, ref.x, atol=1e-4)
+
+
+def test_pool_holds_both_kinds(problem):
+    pool = PreparedPool(max_size=4, num_blocks=8)
+    fp_dense = pool.register(problem.A, mode="dense", materialize_p=False)
+    fp_mat = pool.register(problem.coo, mode="matfree")
+    assert fp_dense != fp_mat  # sparse registration fingerprints differently
+    assert isinstance(pool.get(fp_dense), PreparedSolver)
+    assert isinstance(pool.get(fp_mat), MatrixFreePreparedSolver)
+    resident = {e["fingerprint"]: e for e in pool.resident()}
+    assert resident[fp_dense]["path"] == "dense"
+    assert resident[fp_mat]["path"] == "matfree"
+    assert resident[fp_mat]["memory_bytes"] > 0
+
+
+def test_serving_queue_with_matfree_system(problem, rhs_batch):
+    """End to end: coalesced requests against a matfree-pooled system."""
+    B, xs = rhs_batch
+
+    async def main():
+        async with SolveServer(
+            max_batch=3, max_wait_ms=20.0, num_epochs=150,
+            prepare_kwargs=dict(num_blocks=8, mode="matfree"),
+        ) as srv:
+            fp = srv.register(problem.coo)
+            return await asyncio.gather(
+                *(srv.submit(fp, B[:, i]) for i in range(3))
+            )
+
+    results = asyncio.run(main())
+    mf = prepare(problem.coo, mode="matfree", num_blocks=8)
+    want = mf.solve(B[:, :3], num_epochs=150).x
+    for i, r in enumerate(results):
+        np.testing.assert_allclose(r.x, want[:, i], atol=1e-5)

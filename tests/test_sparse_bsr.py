@@ -1,0 +1,205 @@
+"""Blocked-ELL / BSR format tests: conversion, slicing, products, edges.
+
+Covers the ISSUE 3 satellite cases explicitly — negative-index validation
+in COOMatrix, empty row blocks, and single-nnz blocks — plus property-style
+conversion roundtrips across shapes and block sizes via ``repro.testing``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse import COOMatrix, generate_schenk_like
+from repro.sparse.bsr import BlockEll, PartitionedBSR
+from repro.testing import given, settings, st
+
+
+def _random_coo(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    nnz = max(int(density * m * n), 1)
+    rows = rng.integers(0, m, size=nnz).astype(np.int32)
+    cols = rng.integers(0, n, size=nnz).astype(np.int32)
+    # dedupe so COO scatter and blocked scatter agree exactly
+    key = rows.astype(np.int64) * n + cols
+    _, keep = np.unique(key, return_index=True)
+    vals = rng.standard_normal(keep.size)
+    return COOMatrix(rows[keep], cols[keep], vals, (m, n))
+
+
+def test_coo_rejects_negative_indices():
+    """Regression: rows.min() < 0 used to scatter silently from the end."""
+    with pytest.raises(ValueError, match="negative"):
+        COOMatrix(
+            np.array([-1], np.int32), np.array([0], np.int32),
+            np.array([1.0]), (4, 4),
+        )
+    with pytest.raises(ValueError, match="negative"):
+        COOMatrix(
+            np.array([0], np.int32), np.array([-2], np.int32),
+            np.array([1.0]), (4, 4),
+        )
+
+
+@settings(max_examples=10)
+@given(
+    st.integers(min_value=1, max_value=90),
+    st.integers(min_value=1, max_value=90),
+    st.integers(min_value=0, max_value=3),
+)
+def test_blockell_roundtrip_property(m, n, seed):
+    coo = _random_coo(m, n, density=0.05, seed=seed)
+    for bshape in ((8, 8), (4, 16), (8, 128)):
+        be = BlockEll.from_coo(coo, bshape)
+        np.testing.assert_allclose(be.to_dense(), coo.to_dense())
+
+
+def test_blockell_empty_matrix():
+    """No nonzeros at all: one zero padding slot per block-row, zero dense."""
+    coo = COOMatrix(
+        np.empty(0, np.int32), np.empty(0, np.int32), np.empty(0), (20, 12)
+    )
+    be = BlockEll.from_coo(coo, (8, 8))
+    assert be.slots == 1
+    np.testing.assert_array_equal(be.to_dense(), 0.0)
+    # and an empty-slice matmul returns exact zeros
+    out = be.matmul(jnp.ones((12, 3), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_blockell_single_nnz():
+    """One entry: exactly one real tile; everything else stays padding."""
+    coo = COOMatrix(
+        np.array([13], np.int32), np.array([21], np.int32),
+        np.array([2.5]), (32, 32),
+    )
+    be = BlockEll.from_coo(coo, (8, 8))
+    dense = be.to_dense()
+    assert dense[13, 21] == 2.5
+    assert np.count_nonzero(dense) == 1
+    assert np.count_nonzero(np.asarray(be.data)) == 1
+
+
+def test_blockell_row_block_slicing_matches_dense():
+    coo = _random_coo(64, 40, density=0.1, seed=7)
+    be = BlockEll.from_coo(coo, (8, 8))
+    dense = coo.to_dense()
+    for start, stop in ((0, 16), (16, 48), (56, 64)):
+        sl = be.slice_row_blocks(start, stop)
+        np.testing.assert_allclose(sl.to_dense(), dense[start:stop])
+    with pytest.raises(ValueError, match="multiples"):
+        be.slice_row_blocks(4, 12)
+    with pytest.raises(ValueError, match="out of range"):
+        be.slice_row_blocks(0, 128)
+
+
+def _dense_blocks(coo, J, p, p_pad, dtype=np.float32):
+    """Zero-padded (J, p_pad, n) dense oracle of the partition layout."""
+    A = coo.to_dense().astype(dtype)
+    blocks = np.zeros((J, p_pad, coo.shape[1]), dtype)
+    for j in range(J):
+        rows = A[j * p:(j + 1) * p]
+        blocks[j, : rows.shape[0]] = rows
+    return blocks
+
+
+@pytest.mark.parametrize("num_blocks", [1, 3, 8])
+def test_partitioned_products_match_dense(num_blocks):
+    coo = generate_schenk_like(100, sparsity=0.96, seed=2)
+    op = PartitionedBSR.from_coo(coo, num_blocks, (8, 8), with_gram=True)
+    blocks = _dense_blocks(coo, num_blocks, op.p, op.p_pad)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((100, 4)).astype(np.float32))
+    got = np.asarray(op.matvec(x))
+    np.testing.assert_allclose(
+        got, np.einsum("jpn,nk->jpk", blocks, np.asarray(x)), atol=1e-4
+    )
+    y = jnp.asarray(
+        rng.standard_normal((num_blocks, op.p_pad, 4)).astype(np.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(op.rmatvec(y)),
+        np.einsum("jpn,jpk->jnk", blocks, np.asarray(y)),
+        atol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(op.gram_mv(y)),
+        np.einsum("jpn,jqn,jqk->jpk", blocks, blocks, np.asarray(y)),
+        rtol=1e-5, atol=1e-2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(op.gram_diag()),
+        np.einsum("jpn,jpn->jp", blocks, blocks),
+        rtol=1e-5, atol=1e-2,
+    )
+
+
+def test_partitioned_empty_row_block():
+    """A partition block with zero nonzeros must still convert and multiply
+    (its products are exactly zero)."""
+    # all entries in rows < 25: blocks 2 and 3 of a 4-way split are empty
+    coo = _random_coo(25, 48, density=0.1, seed=11)
+    coo = COOMatrix(coo.rows, coo.cols, coo.vals, (100, 48))
+    op = PartitionedBSR.from_coo(coo, 4, (8, 8), with_gram=True)
+    x = jnp.ones((48, 2), jnp.float32)
+    out = np.asarray(op.matvec(x))
+    np.testing.assert_array_equal(out[2:], 0.0)
+    assert np.abs(out[0]).max() > 0
+    y = jnp.ones((4, op.p_pad, 2), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(op.gram_mv(y))[2:], 0.0)
+
+
+def test_partitioned_single_nnz_block():
+    coo = COOMatrix(
+        np.array([30], np.int32), np.array([5], np.int32),
+        np.array([3.0]), (64, 16),
+    )
+    op = PartitionedBSR.from_coo(coo, 4, (8, 8))
+    x = jnp.asarray(np.eye(16, dtype=np.float32))
+    out = np.asarray(op.matvec(x))  # (4, p_pad, 16)
+    j, local = 30 // op.p, 30 % op.p
+    assert out[j, local, 5] == 3.0
+    assert np.count_nonzero(out) == 1
+
+
+def test_duplicate_coordinates_resolve_last_wins_everywhere():
+    """Regression: duplicates must resolve identically (last-wins, matching
+    COOMatrix.to_dense) in the forward shards AND the Gram shards — the
+    Gram builder sums per-coordinate contributions, so an up-front dedupe
+    is what keeps the inner-CG operator consistent with A_j."""
+    coo = COOMatrix(
+        np.array([0, 0, 1], np.int32), np.array([0, 0, 1], np.int32),
+        np.array([5.0, 2.0, 3.0]), (8, 8),
+    )
+    op = PartitionedBSR.from_coo(coo, 1, (8, 8), with_gram=True)
+    dense = coo.to_dense()  # A[0,0] == 2.0 (last wins)
+    assert dense[0, 0] == 2.0
+    y = jnp.asarray(np.eye(8, dtype=np.float32)[None])
+    np.testing.assert_allclose(
+        np.asarray(op.gram_mv(y))[0], dense @ dense.T, atol=1e-5
+    )
+    x = jnp.asarray(np.eye(8, dtype=np.float32))
+    np.testing.assert_allclose(np.asarray(op.matvec(x))[0], dense, atol=1e-5)
+
+
+def test_transpose_shards_match_scatter_path():
+    coo = generate_schenk_like(80, sparsity=0.95, seed=4)
+    plain = PartitionedBSR.from_coo(coo, 4, (8, 8))
+    withT = PartitionedBSR.from_coo(coo, 4, (8, 8), with_transpose=True)
+    assert plain.tra_indices is None and withT.tra_indices is not None
+    assert plain.nbytes < withT.nbytes  # the default really is leaner
+    rng = np.random.default_rng(5)
+    y = jnp.asarray(rng.standard_normal((4, plain.p_pad, 3)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(plain.rmatvec(y)), np.asarray(withT.rmatvec(y)), atol=1e-4
+    )
+
+
+def test_block_rhs_layout():
+    coo = generate_schenk_like(50, sparsity=0.9, seed=6)
+    op = PartitionedBSR.from_coo(coo, 4, (8, 8))  # p=13 -> p_pad=16
+    b = np.arange(50, dtype=np.float32)
+    out = np.asarray(op.block_rhs(b))
+    assert out.shape == (4, op.p_pad, 1)
+    for j in range(4):
+        seg = b[j * op.p:(j + 1) * op.p]
+        np.testing.assert_array_equal(out[j, : seg.size, 0], seg)
+        np.testing.assert_array_equal(out[j, seg.size:, 0], 0.0)
