@@ -1,8 +1,10 @@
-"""Kernel microbenchmarks: fused consensus update + blocked trisolve vs their
-pure-jnp oracles at paper-scale shapes. On this CPU container the Pallas
-kernels run in interpret mode, so absolute times are NOT TPU times — the
-benchmark validates correctness at scale and reports the oracle (XLA:CPU)
-time as the meaningful number; TPU wall-times come from the roofline model.
+"""Kernel microbenchmarks: fused consensus update + blocked trisolve + fused
+projection pass vs their pure-jnp oracles at paper-scale shapes. On this CPU
+container the Pallas kernels run in interpret mode, so absolute times are
+NOT TPU times — the benchmark validates correctness at scale and reports the
+oracle (XLA:CPU) time as the meaningful number; TPU wall-times come from the
+roofline model. Rows marked ``gated`` feed the bench-smoke baseline
+comparison (``benchmarks/record.py --compare``).
 """
 from __future__ import annotations
 
@@ -16,6 +18,8 @@ from repro.kernels.project import ops as pops
 from repro.kernels.project.ref import consensus_update_ref
 from repro.kernels.trisolve import ops as tops
 from repro.kernels.trisolve.ref import trisolve_ref
+from repro.sparse import generate_schenk_like
+from repro.sparse.bsr import PartitionedBSR
 
 
 def _time(fn, *args, repeats=3):
@@ -44,6 +48,7 @@ def run(quick=False):
     rows.append({
         "name": f"kernels/project_{p}x{n}",
         "us_per_call": t_ref * 1e6,
+        "gated": True,
         "derived": f"oracle_time(maxerr_vs_pallas={err:.1e}) "
                    f"flops_implicit={4*n*p} flops_dense={2*n*n}",
     })
@@ -58,6 +63,37 @@ def run(quick=False):
     rows.append({
         "name": f"kernels/trisolve_{n}",
         "us_per_call": t_ref * 1e6,
+        "gated": True,
         "derived": f"oracle_time(relerr_vs_pallas={rel:.1e}) blocked_128_neumann",
+    })
+
+    # fused projection pass (A_j x + A_jᵀ y from one tile read) vs the two
+    # separate blocked-ELL products — the matfree epoch's hot contraction
+    J, k = 8, 8
+    coo = generate_schenk_like(n, sparsity=0.9985, seed=5)
+    op = PartitionedBSR.from_coo(coo, J, balance=True)
+    x = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+    y = jnp.asarray(
+        rng.standard_normal((J, op.p_pad, k)).astype(np.float32)
+    )
+    fused = jax.jit(lambda x, y: op.fused_project(x, y))
+    separate = jax.jit(lambda x, y: (op.matvec(x), op.rmatvec(y)))
+    t_fused = _time(lambda: fused(x, y))
+    t_sep = _time(lambda: separate(x, y))
+    f, g = fused(x, y)
+    mv, rmv = separate(x, y)
+    err = float(
+        jnp.maximum(jnp.max(jnp.abs(f - mv)), jnp.max(jnp.abs(g - rmv)))
+    )
+    rows.append({
+        "name": f"kernels/spmm_fused_{n}_J{J}",
+        "us_per_call": t_fused * 1e6,
+        "gated": True,
+        "derived": (
+            f"separate_products={t_sep * 1e6:.1f}us "
+            f"fused_speedup={t_sep / t_fused:.2f}x "
+            f"maxerr_vs_separate={err:.1e} "
+            f"ell_slots={op.slot_occupancy()[0]}"
+        ),
     })
     return rows

@@ -46,12 +46,22 @@ def run_consensus(
     avg_every: int = 1,
     compress: str | None = None,  # None | "bf16_delta"
     xbar0: jnp.ndarray | None = None,  # warm start (elastic restart)
+    tol: float | None = None,  # masked per-column early exit
 ):
     """Paper eqs. (5)–(7). Returns (x̄_final, history dict).
 
     history carries per-epoch MSE to ``x_ref`` (paper Fig. 2 metric) and the
     global residual when (blocks, bvecs) are supplied; with a batched
     ``(J, n, k)`` input both metrics are per-system ``(k,)`` rows.
+
+    ``tol`` arms the masked in-scan early exit: a column whose residual
+    reaches ``residual_sq <= tol²`` FREEZES — its xs/x̄ columns stop
+    updating under a ``jnp.where`` mask — while the batch keeps its one
+    compiled shape, so one slow column no longer drags converged
+    batchmates through further consensus motion. The mask reads the
+    residual carried from the previous epoch (no extra einsum). Requires
+    (blocks, bvecs); the frozen column's residual history simply repeats
+    its converged value, so ``iterations_to_tol`` reports are unchanged.
 
     ``compress="bf16_delta"`` halves the consensus all-reduce payload by
     communicating the DELTA mean(x)−x̄ in bf16 (eq. 7 rewritten as
@@ -70,6 +80,8 @@ def run_consensus(
         xbar0 = jnp.mean(x0s, axis=0)  # eq. (5)
     elif xbar0.ndim < x0s.ndim - 1:
         xbar0 = jnp.broadcast_to(xbar0[..., None], x0s.shape[1:])
+    if tol is not None and (blocks is None or bvecs is None):
+        raise ValueError("tol early exit needs (blocks, bvecs) for residuals")
 
     def metrics(xbar):
         out = {}
@@ -81,23 +93,36 @@ def run_consensus(
             out["residual_sq"] = block_residual_sq(blocks, bvecs, xbar)
         return out
 
+    init_metrics = metrics(xbar0)
+
     def step(carry, t):
-        xs, xbar = carry
-        xs = xs + gamma * apply_fn(xbar[None] - xs)  # eq. (6), parallel in j
+        xs, xbar, resid = carry
+        xs_new = xs + gamma * apply_fn(xbar[None] - xs)  # eq. (6), parallel j
         do_avg = (t + 1) % avg_every == 0
         if compress == "bf16_delta":
-            delta = jnp.mean(xs - xbar[None], axis=0)  # the wire payload
+            delta = jnp.mean(xs_new - xbar[None], axis=0)  # the wire payload
             delta = delta.astype(jnp.bfloat16).astype(xbar.dtype)
             xbar_new = xbar + eta * delta  # eq. (7), delta form
         else:
-            xbar_new = eta * jnp.mean(xs, axis=0) + (1.0 - eta) * xbar  # eq. (7)
-        xbar = jnp.where(do_avg, xbar_new, xbar)
-        return (xs, xbar), metrics(xbar)
+            xbar_new = (
+                eta * jnp.mean(xs_new, axis=0) + (1.0 - eta) * xbar
+            )  # eq. (7)
+        xbar_new = jnp.where(do_avg, xbar_new, xbar)
+        if tol is not None:
+            # residual of the x̄ this epoch STARTED from, carried from the
+            # previous metrics pass — frozen columns stop moving entirely
+            active = resid > tol * tol  # (k,) batched, scalar otherwise
+            xs_new = jnp.where(active, xs_new, xs)
+            xbar_new = jnp.where(active, xbar_new, xbar)
+        out = metrics(xbar_new)
+        resid_new = out["residual_sq"] if tol is not None else resid
+        return (xs_new, xbar_new, resid_new), out
 
-    (xs, xbar), hist = jax.lax.scan(
-        step, (x0s, xbar0), jnp.arange(num_epochs)
+    resid0 = init_metrics.get("residual_sq", jnp.zeros(()))
+    (xs, xbar, _), hist = jax.lax.scan(
+        step, (x0s, xbar0, resid0), jnp.arange(num_epochs)
     )
-    hist["initial"] = metrics(xbar0)
+    hist["initial"] = init_metrics
     return xbar, hist
 
 

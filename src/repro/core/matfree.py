@@ -1,4 +1,4 @@
-"""Matrix-free prepared solver: block projections via SpMV + inner CG.
+"""Matrix-free prepared solver: block projections via SpMV + inner Gram solves.
 
 The dense path densifies every row block before QR. At 99%+ sparsity that
 densification IS the memory wall — the factors (W_j, R_j) cost O(J·p·n)
@@ -9,25 +9,67 @@ define the block projection directly as
 
 which needs only sparse products with A_j / A_jᵀ plus an inner solve of the
 (p, p) Gram system. This module runs exactly that: blocked-ELL SpMV
-(``repro.sparse.bsr``) feeding a Jacobi-preconditioned inner CG on
-(A_j A_jᵀ) y = A_j v — no QR, no dense blocks, no n×n anything. The Gram
-systems are themselves stored as sparse blocked-ELL shards (near-diagonal
-for Schenk-like matrices), so one inner-CG iteration is one small (p, p)
-SpMV and total device memory stays proportional to the nonzeros.
+(``repro.sparse.bsr``) feeding an inner solve of (A_j A_jᵀ) y = A_j v — no
+dense row blocks, no n×n anything. Two inner solvers share the epoch:
+
+  * ``gram_solver="direct"`` — a per-block pseudo-inverse of the (p, p)
+    Gram, precomputed once at prepare time and applied as ONE batched
+    einsum per epoch. O(J·p²) memory, the same order the paper's own QR
+    factors cost — tiny next to the O(J·p·n) dense blocks — and on small
+    Gram systems it replaces the whole inner iteration with a single MXU
+    contraction.
+  * ``gram_solver="pcg"`` — the Jacobi-preconditioned CG on the sparse
+    blocked-ELL Gram shards, batched across all J blocks and k columns,
+    for systems whose p² dense Gram inverse would not fit. One iteration
+    is one small (p, p) SpMV.
+
+``"auto"`` (the default) picks "direct" while the stacked inverses stay
+under ``DIRECT_GRAM_BYTES`` and "pcg" beyond.
+
+The HOT-LOOP STRUCTURE (this file's perf contract) makes one outer epoch a
+single fused pass over the forward tiles plus the inner Gram solve, by
+carrying the probe ``z_j = A_j x̄`` through the ``lax.scan``:
+
+  * ``z`` doubles as the residual metric AND the projection input: the
+    paper's iterates keep A_j x_j = b_j invariant (every update moves
+    inside the block solution set), so A_j(x̄ − x_j) = z_j − b_j — no
+    second forward product. With the inexact PCG inner solve the invariant
+    drifts, so that path additionally carries ``w_j = A_j x_j``, updated
+    for FREE from the CG residual (x_j ← x_j + γ(v_j − A_jᵀy_j) implies
+    A_j x_j ← w_j + γ·r_cg).
+  * ``z`` is reconstructed each epoch from the identity
+    x̄⁺ = KNOWN − (ηγ/J)·Σ_j A_jᵀy_j, where KNOWN depends only on state
+    available BEFORE the transpose product. That is what makes the two
+    tile products of an epoch — A_j·KNOWN (forward) and A_jᵀy_j
+    (transpose) — simultaneously available, so
+    ``PartitionedBSR.fused_project`` (and the fused Pallas kernel under
+    ``use_kernels=True``) computes both from ONE pass over the ELL tiles
+    instead of the three separate passes (projection matvec, scatter-add
+    rmatvec, residual matvec) the pre-fusion epoch paid.
 
 Zero padding rows (see ``PartitionedBSR``) make the Gram matrix singular on
-the padded coordinates; the CG iterates stay exactly zero there (zero RHS
-rows, Jacobi weight clamped to zero), so the recursion solves the
-nonsingular sub-system and ``A_jᵀ y`` — the only quantity the projection
-uses — is unique regardless (the Gram nullspace is annihilated by A_jᵀ).
+the padded coordinates; both inner solvers return exact zeros there (the
+pseudo-inverse by masked construction, the CG because its iterates stay
+pinned at zero under zero RHS rows and zero Jacobi weights), so ``A_jᵀ y``
+— the only quantity the projection uses — is unique regardless (the Gram
+nullspace is annihilated by A_jᵀ).
 
 The outer consensus iteration is the paper's eqs. (5)–(7) unchanged;
 ``inner_iters`` caps the CG depth per projection (a (p, p) SPD system: CG
 is exact at p steps, and with the Jacobi preconditioner on
 diagonally-dominant Schenk-like Grams it converges far earlier). Per-column
 effective inner iteration counts are recorded every epoch in
-``history["inner_iters"]`` — the matfree analogue of the dense path's
-per-column epoch reporting.
+``history["inner_iters"]`` (the direct solver reports depth 1 — one exact
+application) — the matfree analogue of the dense path's per-column epoch
+reporting.
+
+``solve(..., tol=...)`` arms the masked in-scan early exit: each epoch the
+per-column residual (read off the carried probe ``z``) gates the consensus
+update under ``jnp.where``, so converged columns freeze — their projector
+work stops, and for the PCG path they stop driving the inner-CG depth —
+while the batch keeps its one compiled shape; once EVERY column is frozen
+the whole epoch body short-circuits to a carry-through (``lax.cond``), so
+trailing epochs cost vector ops only.
 """
 from __future__ import annotations
 
@@ -46,6 +88,10 @@ from repro.sparse.matrix import COOMatrix
 # two differ only in how the DENSE path factorizes it)
 MATFREE_METHODS = ("apc", "dapc")
 
+GRAM_SOLVERS = ("auto", "direct", "pcg")
+# auto goes direct while the stacked (J, p_pad, p_pad) Gram inverses fit
+DIRECT_GRAM_BYTES = 64 * 1024 * 1024
+
 
 def _coldot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """⟨a, b⟩ over the row axis, kept broadcastable: (J, p, k) -> (J, 1, k)."""
@@ -59,26 +105,40 @@ def _pcg_gram(
     iters: int,
     tol: float,
     use_kernels: bool,
+    warm: jnp.ndarray | None = None,  # previous epoch's solution, same shape
+    active: jnp.ndarray | None = None,  # (k,) bool: columns that still count
 ):
     """Solve (A_j A_jᵀ) Y = rhs per block and column.
 
     One iteration is one SMALL SpMV with the stored sparse Gram shards
-    (``op.gram_mv``). The loop exits as soon as every column's worst-block
-    relative residual drops below ``tol`` (``iters`` is the hard cap) — on
-    diagonally-dominant Schenk-like Grams the Jacobi-preconditioned
-    iteration converges in a handful of steps, and a ``while_loop`` lets
-    the compiled program actually stop there instead of burning the cap.
+    (``op.gram_mv``). The loop exits as soon as every ACTIVE column's
+    worst-block relative residual drops below ``tol`` (``iters`` is the
+    hard cap) — on diagonally-dominant Schenk-like Grams the
+    Jacobi-preconditioned iteration converges in a handful of steps, and a
+    ``while_loop`` lets the compiled program actually stop there instead of
+    burning the cap. ``warm`` seeds the iteration with the previous outer
+    epoch's solution; ``active`` masks converged outer columns out of the
+    stopping test, so frozen batchmates stop forcing depth on everyone.
 
-    Returns (Y, iters_used (k,)) — the per-column CG depth at which the
-    worst block first converged (capped at ``iters``).
+    Returns (Y, iters_used (k,), final residual rhs − G·Y). The residual
+    is what makes the caller's ``w = A_j x_j`` tracking free — see the
+    module docstring.
     """
     rhs_sq = jnp.maximum(_coldot(rhs, rhs), 1e-30)
 
     def rel_resid(r):  # (k,): worst-block relative residual per column
         return jnp.max(_coldot(r, r) / rhs_sq, axis=0)[0]
 
-    y = jnp.zeros_like(rhs)
-    r = rhs
+    def not_done(rel):  # (k,): columns still above tolerance (and active)
+        live = rel > tol * tol
+        return live if active is None else live & active
+
+    if warm is None:
+        y = jnp.zeros_like(rhs)
+        r = rhs
+    else:
+        y = warm
+        r = rhs - op.gram_mv(warm, use_kernels)
     z = diag_inv * r
     p = z
     rz = _coldot(r, z)
@@ -87,7 +147,7 @@ def _pcg_gram(
 
     def cond(state):
         _, r, _, _, it, _ = state
-        return (it < iters) & jnp.any(rel_resid(r) > tol * tol)
+        return (it < iters) & jnp.any(not_done(rel_resid(r)))
 
     def body(state):
         y, r, p, rz, it, counts = state
@@ -99,13 +159,43 @@ def _pcg_gram(
         rz_new = _coldot(r, z)
         beta = rz_new / jnp.maximum(rz, 1e-30)
         p = z + beta * p
-        counts = counts + (rel_resid(r) > tol * tol).astype(jnp.int32)
+        counts = counts + not_done(rel_resid(r)).astype(jnp.int32)
         return (y, r, p, rz_new, it + 1, counts)
 
-    y, _, _, _, _, counts = jax.lax.while_loop(
+    y, r, _, _, it, counts = jax.lax.while_loop(
         cond, body, (y, r, p, rz, it0, counts0)
     )
-    return y, jnp.minimum(counts + 1, iters)
+    # report the depth at which each column's worst block first converged; a
+    # column that never entered the loop (warm start already below tol, or
+    # masked inactive) reports a true 0
+    used = jnp.minimum(counts + jnp.minimum(it, 1), iters)
+    return y, used, r
+
+
+def _gram_pinv(op: PartitionedBSR, dtype) -> jnp.ndarray:
+    """Per-block dense pseudo-inverse of the Gram shards, (J, p_pad, p_pad).
+
+    Built host-side in float64 from the (near-diagonal) sparse Gram and
+    restricted to the nonsingular sub-block (padding rows — and any exactly
+    dependent rows — are annihilated by the pseudo-inverse, matching the CG
+    iterates staying pinned at zero there). O(J·p³) once at prepare time.
+    """
+    J, Rp, Sg = op.gram_indices.shape
+    bp = op.gram_data.shape[-2]
+    idx = np.asarray(op.gram_indices)
+    data = np.asarray(op.gram_data, dtype=np.float64)
+    out = np.zeros((J, op.p_pad, op.p_pad), np.float64)
+    for j in range(J):
+        G = np.zeros((Rp, Rp, bp, bp))
+        # padding slots target block 0 with zero data: += keeps them inert
+        np.add.at(G, (np.repeat(np.arange(Rp), Sg), idx[j].ravel()),
+                  data[j].reshape(Rp * Sg, bp, bp))
+        G = G.transpose(0, 2, 1, 3).reshape(op.p_pad, op.p_pad)
+        live = np.flatnonzero(np.diag(G) > 0)
+        if live.size:
+            sub = np.linalg.pinv(G[np.ix_(live, live)], hermitian=True)
+            out[j][np.ix_(live, live)] = sub
+    return jnp.asarray(out.astype(dtype))
 
 
 @dataclasses.dataclass
@@ -127,6 +217,9 @@ class MatrixFreePreparedSolver:
     use_kernels: bool
     setup_seconds: float
     diag_inv: jnp.ndarray = dataclasses.field(repr=False, default=None)
+    gram_solver: str = "direct"  # resolved: "direct" | "pcg"
+    gram_inv: jnp.ndarray | None = dataclasses.field(repr=False, default=None)
+    warm_start: bool = False
     num_solves: int = 0
     _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
@@ -151,57 +244,134 @@ class MatrixFreePreparedSolver:
     @property
     def memory_bytes(self) -> int:
         """Device-resident operator bytes (the matfree 'factors')."""
-        return self.op.nbytes + int(self.diag_inv.nbytes)
+        total = self.op.nbytes + int(self.diag_inv.nbytes)
+        if self.gram_inv is not None:
+            total += int(self.gram_inv.nbytes)
+        return total
 
     @property
     def dense_memory_bytes(self) -> int:
         """What the dense path's (J, p, n) blocks alone would cost."""
         return self.op.dense_bytes
 
-    def _solve_program(self, num_epochs: int, inner_iters: int, has_ref: bool):
-        key = (num_epochs, inner_iters, has_ref)
+    def _solve_program(
+        self,
+        num_epochs: int,
+        inner_iters: int,
+        has_ref: bool,
+        tol: float | None,
+    ):
+        key = (num_epochs, inner_iters, has_ref, tol)
         run = self._jit_cache.get(key)
         if run is None:
-            tol, use_kernels = self.inner_tol, self.use_kernels
+            inner_tol, use_kernels = self.inner_tol, self.use_kernels
+            warm_start = self.warm_start
+            direct = self.gram_solver == "direct"
+            tol2 = None if tol is None else float(tol) ** 2
 
-            def solve_phase(op, diag_inv, bvecs, gamma, eta, ref):
-                def project(v):  # (J, n, k) -> (P_j v_j, inner iters (k,))
-                    y, used = _pcg_gram(
-                        op, op.matvec(v, use_kernels), diag_inv,
-                        inner_iters, tol, use_kernels,
-                    )
-                    return v - op.rmatvec(y, use_kernels), used
+            def solve_phase(op, diag_inv, gram_inv, bvecs, gamma, eta, ref):
+                J = op.num_blocks
+                ones = jnp.ones(bvecs.shape[-1], jnp.int32)
 
-                def metrics(xbar):
-                    out = {}
-                    if ref is not None:
-                        d = xbar - (ref[..., None] if ref.ndim == 1 else ref)
-                        out["mse"] = jnp.mean(d * d, axis=0)
-                    r = op.matvec(xbar, use_kernels) - bvecs
-                    out["residual_sq"] = jnp.sum(r * r, axis=(0, 1))
-                    return out
+                def mse(xbar):
+                    d = xbar - (ref[..., None] if ref.ndim == 1 else ref)
+                    return jnp.mean(d * d, axis=0)
 
                 # eqs. (2-3) matfree: min-norm x_j(0) = A_jᵀ (A_jA_jᵀ)⁻¹ b_j
-                y0, setup_iters = _pcg_gram(
-                    op, bvecs, diag_inv, inner_iters, tol, use_kernels
-                )
+                if direct:
+                    y0 = jnp.einsum("jqp,jpk->jqk", gram_inv, bvecs)
+                    setup_iters, r0 = ones, jnp.zeros_like(bvecs)
+                else:
+                    y0, setup_iters, r0 = _pcg_gram(
+                        op, bvecs, diag_inv, inner_iters, inner_tol,
+                        use_kernels,
+                    )
                 x0s = op.rmatvec(y0, use_kernels)
+                # the CG residual hands back w0 = A_j x_j(0) = G y0 for free
+                w0 = bvecs - r0
                 xbar0 = jnp.mean(x0s, axis=0)  # eq. (5)
+                z0 = op.matvec(xbar0, use_kernels)  # probe of x̄_0
+
+                def live_step(xs, xbar, w, z, ywarm, active):
+                    u = z - w  # A_j (x̄ − x_j)
+                    if direct:
+                        y = jnp.einsum("jqp,jpk->jqk", gram_inv, u)
+                        used, r = ones, None
+                    else:
+                        y, used, r = _pcg_gram(
+                            op, u, diag_inv, inner_iters, inner_tol,
+                            use_kernels,
+                            warm=ywarm if warm_start else None, active=active,
+                        )
+                    # x̄⁺ = KNOWN − (ηγ/J)·Σ_j A_jᵀy_j in exact arithmetic,
+                    # and KNOWN needs no transpose product — so the epoch's
+                    # two tile contractions run in ONE fused pass. The
+                    # trajectory itself stays float-CANONICAL (same op
+                    # order as the dense consensus); KNOWN only serves as
+                    # the fused forward operand, and the probe is patched
+                    # with the exact float difference x̄⁺ − KNOWN, keeping
+                    # z accurate to ULP instead of compounding
+                    # reassociation noise across epochs
+                    q = jnp.mean(xs, axis=0)
+                    known = (
+                        eta * q + eta * gamma * (xbar - q) + (1.0 - eta) * xbar
+                    )
+                    f, g = op.fused_project(known, y, use_kernels)
+                    xs_new = xs + gamma * (xbar[None] - xs - g)  # eq. (6)
+                    xbar_new = (
+                        eta * jnp.mean(xs_new, axis=0) + (1.0 - eta) * xbar
+                    )  # eq. (7)
+                    z_new = f + op.matvec(xbar_new - known, use_kernels)
+                    # exact inner solve keeps the paper's A_j x_j = b_j
+                    # invariant, so w stays put; inexact CG drifts it by r
+                    w_new = w if direct else w + gamma * r
+                    if active is not None:
+                        col = active[None]  # (1, k) over (n, k) state
+                        blk = active[None, None]  # (1, 1, k) over (J, ·, k)
+                        xs_new = jnp.where(blk, xs_new, xs)
+                        w_new = jnp.where(blk, w_new, w)
+                        z_new = jnp.where(blk, z_new, z)
+                        xbar_new = jnp.where(col, xbar_new, xbar)
+                        used = jnp.where(active, used, 0)
+                    return (xs_new, xbar_new, w_new, z_new, y), used
 
                 def step(carry, _):
-                    xs, xbar = carry
-                    pv, used = project(xbar[None] - xs)
-                    xs = xs + gamma * pv  # eq. (6)
-                    xbar = eta * jnp.mean(xs, axis=0) + (1.0 - eta) * xbar  # (7)
-                    out = metrics(xbar)
-                    out["inner_iters"] = used
-                    return (xs, xbar), out
+                    xs, xbar, w, z, ywarm = carry
+                    # residual of the CURRENT x̄, read off the carried probe
+                    resid = jnp.sum((z - bvecs) ** 2, axis=(0, 1))
+                    if tol2 is None:
+                        carry, used = live_step(xs, xbar, w, z, ywarm, None)
+                    else:
+                        active = resid > tol2
+                        carry, used = jax.lax.cond(
+                            jnp.any(active),
+                            lambda c: live_step(*c, active),
+                            lambda c: (c, jnp.zeros_like(ones)),
+                            (xs, xbar, w, z, ywarm),
+                        )
+                    out = {"residual_sq": resid, "inner_iters": used}
+                    if ref is not None:
+                        out["mse"] = mse(carry[1])
+                    return carry, out
 
-                (_, xbar), hist = jax.lax.scan(
-                    step, (x0s, xbar0), None, length=num_epochs
+                init = (x0s, xbar0, w0, z0, jnp.zeros_like(y0))
+                (_, xbar, _, z, _), hist = jax.lax.scan(
+                    step, init, None, length=num_epochs
                 )
-                hist["initial"] = metrics(xbar0)
-                hist["initial"]["inner_iters"] = setup_iters
+                # the probe is computed at epoch START, so emitted entry t is
+                # the residual of x̄_t: entry 0 is the "initial" metric and
+                # the final x̄ gets one fresh probe after the scan
+                rfin = op.matvec(xbar, use_kernels) - bvecs
+                resid_fin = jnp.sum(rfin * rfin, axis=(0, 1))
+                emitted = hist.pop("residual_sq")
+                hist["residual_sq"] = jnp.concatenate(
+                    [emitted[1:], resid_fin[None]]
+                )
+                hist["initial"] = {
+                    "residual_sq": emitted[0], "inner_iters": setup_iters,
+                }
+                if ref is not None:
+                    hist["initial"]["mse"] = mse(xbar0)
                 return xbar, hist
 
             run = jax.jit(solve_phase)
@@ -216,13 +386,18 @@ class MatrixFreePreparedSolver:
         eta: float | None = None,
         x_ref: np.ndarray | None = None,
         inner_iters: int | None = None,
+        tol: float | None = None,
     ) -> SolveResult:
         """Consensus solve against the cached sparse operator.
 
         Matches the dense ``PreparedSolver.solve`` contract (batched RHS,
         per-epoch ``residual_sq``/``mse`` history, ``per_column`` scatter);
-        additionally records the per-column inner-CG depth each epoch in
-        ``history["inner_iters"]``.
+        additionally records the per-column inner solve depth each epoch in
+        ``history["inner_iters"]``. ``tol`` arms the masked in-scan early
+        exit: a column whose residual satisfies ``residual_sq <= tol²``
+        freezes (its consensus update and projector work stop) while the
+        batch keeps its one compiled shape — per-column epochs-to-tolerance
+        still read out of ``iterations_to_tol`` exactly as without masking.
         """
         gamma = self.gamma if gamma is None else gamma
         eta = self.eta if eta is None else eta
@@ -234,10 +409,13 @@ class MatrixFreePreparedSolver:
         ref = None if x_ref is None else jnp.asarray(x_ref, dtype)
 
         t0 = time.perf_counter()
-        run = self._solve_program(num_epochs, inner_iters, ref is not None)
+        run = self._solve_program(
+            num_epochs, inner_iters, ref is not None,
+            None if tol is None else float(tol),
+        )
         x, hist = run(
-            self.op, self.diag_inv, bvecs, jnp.asarray(gamma, dtype),
-            jnp.asarray(eta, dtype), ref,
+            self.op, self.diag_inv, self.gram_inv, bvecs,
+            jnp.asarray(gamma, dtype), jnp.asarray(eta, dtype), ref,
         )
         x = jax.block_until_ready(x)
         wall = time.perf_counter() - t0
@@ -274,28 +452,47 @@ def prepare_matfree(
     inner_iters: int | None = None,
     inner_tol: float = 1e-6,
     use_kernels: bool = False,
+    balance: bool = True,
+    gram_solver: str = "auto",
+    warm_start: bool = False,
 ) -> MatrixFreePreparedSolver:
-    """Matfree setup: COO -> partitioned blocked-ELL + Jacobi weights.
+    """Matfree setup: COO -> partitioned blocked-ELL + inner Gram solver.
 
     ``A`` may be a ``COOMatrix`` (never densified) or a dense array
-    (converted). ``inner_iters=None`` resolves to min(p_pad, 32) — CG on the
-    (p, p) Gram is exact at p steps, and the preconditioned iteration
-    converges much earlier on diagonally-dominant systems.
+    (converted). ``gram_solver="auto"`` precomputes the per-block Gram
+    pseudo-inverses while they fit ``DIRECT_GRAM_BYTES`` and falls back to
+    the Jacobi-PCG on the sparse Gram shards beyond; "direct"/"pcg" force a
+    path. ``inner_iters=None`` resolves to min(p_pad, 32) — the PCG cap;
+    CG on the (p, p) Gram is exact at p steps, and the preconditioned
+    iteration converges much earlier on diagonally-dominant systems.
+    ``balance`` stores the ELL tiles in the slot-minimizing row order (a
+    pure setup cost; the operator contract is order-invariant), and
+    ``warm_start`` seeds each epoch's inner CG with the previous epoch's
+    Gram solution (PCG path only).
     """
     if method not in MATFREE_METHODS:
         raise ValueError(
             f"matfree path supports the consensus methods {MATFREE_METHODS}; "
             f"got {method!r} (use the dense path for it)"
         )
+    if gram_solver not in GRAM_SOLVERS:
+        raise ValueError(f"gram_solver must be one of {GRAM_SOLVERS}")
     t0 = time.perf_counter()
     coo = A if isinstance(A, COOMatrix) else COOMatrix.from_dense(np.asarray(A))
+    dtype = np.dtype(dtype or np.float32)
     op = PartitionedBSR.from_coo(
-        coo, num_blocks, block_shape, np.dtype(dtype or np.float32),
+        coo, num_blocks, block_shape, dtype,
         with_transpose=use_kernels,  # only the Pallas path streams A_jᵀ tiles
-        with_gram=True,  # the inner-CG operator (near-diagonal, few % extra)
+        with_gram=True,  # the inner-solve operator (near-diagonal, few % extra)
+        balance=balance,
     )
-    diag = op.gram_diag()  # (J, p_pad); exactly 0 on padded rows
-    diag_inv = jnp.where(diag > 0, 1.0 / jnp.maximum(diag, 1e-30), 0.0)[..., None]
+    # relative-epsilon Jacobi clamp: padded rows stay 0, near-zero Gram
+    # diagonals are bounded instead of exploding (see jacobi_weights)
+    diag_inv = op.jacobi_weights()
+    if gram_solver == "auto":
+        inv_bytes = num_blocks * op.p_pad * op.p_pad * dtype.itemsize
+        gram_solver = "direct" if inv_bytes <= DIRECT_GRAM_BYTES else "pcg"
+    gram_inv = _gram_pinv(op, dtype) if gram_solver == "direct" else None
     if inner_iters is None:
         inner_iters = min(op.p_pad, 32)
     jax.block_until_ready(diag_inv)
@@ -311,4 +508,7 @@ def prepare_matfree(
         use_kernels=use_kernels,
         setup_seconds=setup_seconds,
         diag_inv=diag_inv,
+        gram_solver=gram_solver,
+        gram_inv=gram_inv,
+        warm_start=warm_start,
     )

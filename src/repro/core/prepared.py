@@ -284,8 +284,11 @@ class PreparedSolver:
         plus the per-b substitution); never re-partitions or re-factorizes.
 
         kwargs are forwarded to the method (``avg_every``/``compress``/
-        ``xbar0`` for the consensus methods, ``tol`` for cgnr, ``lr`` for
-        dgd).
+        ``xbar0``/``tol`` for the consensus methods, ``tol`` for cgnr,
+        ``lr`` for dgd). For apc/dapc, ``tol`` arms the masked per-column
+        early exit: columns that reach ``residual_sq <= tol²`` freeze
+        in-scan (``repro.core.consensus``) while the batch keeps one
+        compiled shape — matching the matfree path's ``solve(tol=...)``.
         """
         gamma = self.gamma if gamma is None else gamma
         eta = self.eta if eta is None else eta
@@ -342,6 +345,9 @@ def prepare(
     inner_iters: int | None = None,
     inner_tol: float = 1e-6,
     matfree_threshold_bytes: int | None = None,
+    balance: bool = True,
+    gram_solver: str = "auto",
+    warm_start: bool = False,
 ):  # -> PreparedSolver | repro.core.matfree.MatrixFreePreparedSolver
     """Algorithm 1 steps 1–4, b-independent: partition A, factorize every
     block, build the jitted projector. Returns the reusable PreparedSolver.
@@ -349,11 +355,12 @@ def prepare(
     ``mode`` selects the execution path on top of the block regime:
     tall/wide/auto keep their dense-path meaning; ``"dense"`` forces the
     densified path with auto block regime; ``"matfree"`` returns a
-    ``MatrixFreePreparedSolver`` (sparse blocked-ELL operator + inner-CG
-    projections, never densifying a block); ``"auto"`` also picks matfree
-    when the nnz/memory estimate says the dense blocks would not pay off
-    (``resolve_path``). ``block_shape``/``inner_iters``/``inner_tol`` only
-    apply to the matfree path.
+    ``MatrixFreePreparedSolver`` (sparse blocked-ELL operator + fused
+    projection epochs, never densifying a block); ``"auto"`` also picks
+    matfree when the nnz/memory estimate says the dense blocks would not
+    pay off (``resolve_path``). ``block_shape``/``inner_iters``/
+    ``inner_tol``/``balance``/``gram_solver``/``warm_start`` only apply to
+    the matfree path (see ``repro.core.matfree.prepare_matfree``).
 
     Cached per method (dense path):
       * dapc — (W_j, R_j) reduced-QR factors (paper eqs. 1/4);
@@ -375,7 +382,8 @@ def prepare(
         return matfree.prepare_matfree(
             A, method=method, num_blocks=num_blocks, dtype=dtype,
             gamma=gamma, eta=eta, inner_iters=inner_iters,
-            inner_tol=inner_tol, use_kernels=use_kernels, **kw,
+            inner_tol=inner_tol, use_kernels=use_kernels, balance=balance,
+            gram_solver=gram_solver, warm_start=warm_start, **kw,
         )
     if isinstance(A, COOMatrix):
         A = A.to_dense()  # the dense path's per-block decompress, up front

@@ -28,6 +28,9 @@ _PREPARE_KWARGS = (
     "inner_iters",
     "inner_tol",
     "matfree_threshold_bytes",
+    "balance",
+    "gram_solver",
+    "warm_start",
 )
 
 
@@ -58,7 +61,11 @@ def solve(
     matfree past the nnz/memory threshold — see ``prepare``).
 
     kwargs are forwarded to the method (e.g. ``materialize_p=False`` /
-    ``use_kernels=True`` for dapc, ``lr=`` for dgd).
+    ``use_kernels=True`` for dapc, ``lr=`` for dgd). ``tol=`` on the
+    consensus methods arms the masked per-column early exit on BOTH
+    execution paths: converged columns freeze inside the compiled scan
+    (identical per-column ``iterations_to_tol`` to solo solves) while a
+    straggler column keeps iterating.
     """
     prep_kw = {k: kwargs.pop(k) for k in _PREPARE_KWARGS if k in kwargs}
     prep = prepare(

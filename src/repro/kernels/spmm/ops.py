@@ -31,3 +31,31 @@ def spmm(
     bp = data.shape[-2]
     out = _kernel.spmm_padded(indices, data, x, interpret=bool(interpret))
     return out.reshape(J, R * bp, -1).astype(data.dtype)
+
+
+def spmm_fused(
+    indices: jnp.ndarray,  # (J, R, S) int32
+    data: jnp.ndarray,  # (J, R, S, bp, bn)
+    x: jnp.ndarray,  # (J, C, bn, k) tile view (see bsr._pad_cols)
+    y: jnp.ndarray,  # (J, R, bp, k) row-space operand
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused projection pass: (A_j x, staged A_jᵀ y contributions).
+
+    One grid pass over the tiles; returns the forward product
+    (J, R*bp, k) and the per-slot transposed contributions
+    (J, R, S, bn, k), both cast back to the data dtype. The caller
+    scatter-adds the contributions into their column blocks
+    (``repro.sparse.bsr._scatter_contrib``).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    J, R, _ = indices.shape
+    bp = data.shape[-2]
+    fwd, contrib = _kernel.spmm_fused_padded(
+        indices, data, x, y, interpret=bool(interpret)
+    )
+    return (
+        fwd.reshape(J, R * bp, -1).astype(data.dtype),
+        contrib.astype(data.dtype),
+    )

@@ -36,3 +36,23 @@ def spmm_ref(
         return dense @ x_j.reshape(-1, x_j.shape[-1]).astype(jnp.float32)
 
     return jax.vmap(one)(indices, data, x)
+
+
+def spmm_fused_ref(
+    indices: jnp.ndarray,  # (J, R, S)
+    data: jnp.ndarray,  # (J, R, S, bp, bn)
+    x: jnp.ndarray,  # (J, C, bn, k)
+    y: jnp.ndarray,  # (J, R, bp, k)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense reference of the fused pass: (A x (J, R*bp, k), Aᵀ y
+    (J, C*bn, k)), both f32 — the transpose is fully scatter-added (the
+    kernel's staged per-slot form is compared post-scatter)."""
+    C = x.shape[1]
+
+    def one(idx_j, data_j, x_j, y_j):
+        dense = blocked_ell_to_dense(idx_j, data_j, C)
+        fwd = dense @ x_j.reshape(-1, x_j.shape[-1]).astype(jnp.float32)
+        tra = dense.T @ y_j.reshape(-1, y_j.shape[-1]).astype(jnp.float32)
+        return fwd, tra
+
+    return jax.vmap(one)(indices, data, x, y)

@@ -15,6 +15,14 @@ dim), accumulating in VMEM in f32 and initialized at s == 0.
 
 Padding slots multiply a zero tile against column block 0 — they add
 exactly 0.0, so no masking is needed anywhere.
+
+``spmm_fused_padded`` is the projection-epoch variant: the SAME grid pass
+additionally takes a row-space operand y (J, R, bp, k) and emits, next to
+the accumulated forward product, the per-slot transposed tile products
+``data[j, r, s]ᵀ @ y[j, r]`` — the tile is read from VMEM once and feeds
+both MXU contractions. The caller scatter-adds the staged (J, R, S, bn, k)
+contributions into the column space (``repro.sparse.bsr``), completing
+A_jᵀ y without a second pass over the tiles.
 """
 from __future__ import annotations
 
@@ -70,3 +78,71 @@ def spmm_padded(
         out_shape=jax.ShapeDtypeStruct((J, R, bp, k), jnp.float32),
         interpret=interpret,
     )(indices, data, x)
+
+
+def _spmm_fused_kernel(idx_ref, data_ref, x_ref, y_ref, fwd_ref, ctr_ref):
+    """Grid (J, R, S): one tile read feeds both MXU contractions.
+
+    The forward row stripe accumulates across the s axis exactly like
+    ``_spmm_kernel``; the transposed contribution of this (r, s) tile is
+    written once to its own staging slot (no revisit, no accumulation).
+    """
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        fwd_ref[...] = jnp.zeros_like(fwd_ref)
+
+    w = data_ref[0, 0, 0].astype(jnp.float32)  # (bp, bn)
+    xb = x_ref[0, 0].astype(jnp.float32)  # (bn, k)
+    yb = y_ref[0, 0].astype(jnp.float32)  # (bp, k)
+    fwd_ref[0, 0] += jnp.dot(w, xb, preferred_element_type=jnp.float32)
+    ctr_ref[0, 0, 0] = jnp.dot(w.T, yb, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmm_fused_padded(
+    indices: jnp.ndarray,  # (J, R, S) int32 column-block ids
+    data: jnp.ndarray,  # (J, R, S, bp, bn)
+    x: jnp.ndarray,  # (J, C, bn, k) tile view of the column space
+    y: jnp.ndarray,  # (J, R, bp, k) row-space operand for the A_jᵀ pass
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (fwd (J, R, bp, k), contrib (J, R, S, bn, k)) in f32.
+
+    ``fwd`` is A_j x (padded rows included); ``contrib[j, r, s]`` is
+    ``data[j, r, s]ᵀ @ y[j, r]`` awaiting the caller's scatter-add into
+    column block ``indices[j, r, s]``.
+    """
+    J, R, S = indices.shape
+    bp, bn = data.shape[-2:]
+    k = x.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(J, R, S),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, 1, bp, bn), lambda j, r, s, idx: (j, r, s, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bn, k), lambda j, r, s, idx: (j, idx[j, r, s], 0, 0)
+            ),
+            pl.BlockSpec((1, 1, bp, k), lambda j, r, s, idx: (j, r, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bp, k), lambda j, r, s, idx: (j, r, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, 1, bn, k), lambda j, r, s, idx: (j, r, s, 0, 0)
+            ),
+        ],
+    )
+    return pl.pallas_call(
+        _spmm_fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((J, R, bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((J, R, S, bn, k), jnp.float32),
+        ),
+        interpret=interpret,
+    )(indices, data, x, y)

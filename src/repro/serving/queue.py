@@ -346,7 +346,13 @@ class SolveServer:
             # there, and the local reference keeps the factors alive even if
             # the pool evicts this entry mid-solve
             prep = self.pool.get(fingerprint)
-            return prep.solve(B, num_epochs=self.num_epochs, **self.solve_kwargs)
+            kwargs = dict(self.solve_kwargs)
+            if self.tol is not None and prep.method in ("apc", "dapc"):
+                # arm the masked in-scan early exit at the reporting
+                # tolerance: converged (and zero-padded bucket) columns
+                # freeze instead of burning projector work to the epoch cap
+                kwargs.setdefault("tol", self.tol)
+            return prep.solve(B, num_epochs=self.num_epochs, **kwargs)
 
         try:
             result = await loop.run_in_executor(self._executor, run)

@@ -25,6 +25,15 @@ The uniform partition pads each block to ``p_pad`` rows with ZERO rows
 (b is padded with zeros at the same positions): a zero row is the trivially
 consistent equation 0·x = 0, so the block's solution set — and therefore
 its projection — is unchanged, and no dense mixing rows are needed.
+
+``from_coo(..., balance=True)`` additionally reorders the rows WITHIN each
+partition block before tiling, packing rows that share column blocks into
+the same ``bp``-row block-row so the slot count ``S`` (a max over
+block-rows) tightens toward the mean. The permutation is applied purely
+internally: ``matvec``/``rmatvec``/``fused_project`` translate between the
+external (original) row order and the internal (balanced) tile layout, so
+every public product — and therefore the solver contract — is bit-for-bit
+order-identical to the unbalanced operator.
 """
 from __future__ import annotations
 
@@ -83,6 +92,104 @@ def _ell_arrays(
     data = np.zeros((R, S, bp, bn), dtype)
     data[br, slot[inv], rows % bp, cols % bn] = vals
     return indices, data
+
+
+def _balance_perm(
+    local: np.ndarray,  # entry rows, external padded-local ids in [0, p_pad)
+    col_blocks: np.ndarray,  # entry column-block ids
+    p_pad: int,
+    bp: int,
+    max_sweeps: int = 50,
+) -> np.ndarray:
+    """Row order tightening the blocked-ELL slot count of ONE partition block.
+
+    ``S`` is max over block-rows ("bins" of ``bp`` rows) of the number of
+    DISTINCT column blocks the bin's rows touch. The identity order is
+    already a strong clustering for diagonal-ridge matrices (consecutive
+    rows share their diagonal column block), so instead of rebuilding the
+    grouping from scratch this runs steepest-descent row SWAPS from the
+    identity: every bin sitting at the current maximum tries the exchange
+    that pulls BOTH affected bins strictly below it (ties broken toward
+    the fewest total tiles), and the max ratchets down until no heavy bin
+    can shed a tile. The result can therefore never pad more slots than
+    the unbalanced layout.
+
+    Returns ``ext_pos`` (p_pad,) int32: the external row occupying each
+    internal position.
+    """
+    nbins = p_pad // bp
+    row_tiles: dict[int, frozenset] = {}
+    for r, c in zip(local.tolist(), col_blocks.tolist()):
+        row_tiles.setdefault(r, set()).add(c)  # type: ignore[arg-type]
+    row_tiles = {r: frozenset(t) for r, t in row_tiles.items()}
+    empty = frozenset()
+    tiles_of = [row_tiles.get(r, empty) for r in range(p_pad)]
+
+    members = [list(range(b * bp, (b + 1) * bp)) for b in range(nbins)]
+    # per-bin tile -> number of member rows carrying it (multiplicity lets a
+    # candidate removal know which tiles it would actually free)
+    mult: list[dict] = []
+    for b in range(nbins):
+        m: dict = {}
+        for r in members[b]:
+            for t in tiles_of[r]:
+                m[t] = m.get(t, 0) + 1
+        mult.append(m)
+    counts = [len(m) for m in mult]
+
+    def swap_delta(b1, r1, b2, r2):
+        """Bin tile counts after exchanging r1 (in b1) with r2 (in b2)."""
+        t1, t2 = tiles_of[r1], tiles_of[r2]
+        gone1 = sum(1 for t in t1 if mult[b1][t] == 1 and t not in t2)
+        new1 = sum(1 for t in t2 if t not in mult[b1] and t not in t1)
+        gone2 = sum(1 for t in t2 if mult[b2][t] == 1 and t not in t1)
+        new2 = sum(1 for t in t1 if t not in mult[b2] and t not in t2)
+        return counts[b1] - gone1 + new1, counts[b2] - gone2 + new2
+
+    def apply_swap(b1, i1, b2, i2):
+        r1, r2 = members[b1][i1], members[b2][i2]
+        members[b1][i1], members[b2][i2] = r2, r1
+        for b, out_r, in_r in ((b1, r1, r2), (b2, r2, r1)):
+            m = mult[b]
+            for t in tiles_of[out_r]:
+                m[t] -= 1
+                if not m[t]:
+                    del m[t]
+            for t in tiles_of[in_r]:
+                m[t] = m.get(t, 0) + 1
+            counts[b] = len(m)
+
+    for _ in range(max_sweeps):
+        improved = False
+        worst = max(counts)
+        for b1 in sorted(range(nbins), key=lambda b: -counts[b]):
+            if counts[b1] < worst:
+                break
+            # lightest bins first: that's where a heavy row can land without
+            # raising the max, and scanning a handful keeps the sweep cheap
+            targets = sorted(
+                (b for b in range(nbins) if b != b1 and counts[b] < counts[b1]),
+                key=lambda b: counts[b],
+            )[:8]
+            best = None
+            for i1 in range(bp):
+                for b2 in targets:
+                    for i2 in range(bp):
+                        c1, c2 = swap_delta(
+                            b1, members[b1][i1], b2, members[b2][i2]
+                        )
+                        if max(c1, c2) >= worst:
+                            continue  # must pull BOTH bins under the max
+                        key = (max(c1, c2), c1 + c2)
+                        if best is None or key < best[0]:
+                            best = (key, i1, b2, i2)
+            if best is not None:
+                _, i1, b2, i2 = best
+                apply_swap(b1, i1, b2, i2)
+                improved = True
+        if not improved:
+            break
+    return np.concatenate([np.asarray(m) for m in members]).astype(np.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,6 +321,44 @@ def _ell_rmatmul_stacked(indices, data, yb, num_col_blocks):
     )(indices, data, yb)
 
 
+def _scatter_contrib(indices, contrib, num_col_blocks):
+    """Scatter-add per-slot transpose contributions into the column space.
+
+    indices (R, S), contrib (R, S, bn, k) -> (C*bn, k). Padding slots target
+    column block 0 with zero data — they add exactly 0.
+    """
+    C = num_col_blocks
+    out = jnp.zeros((C, *contrib.shape[-2:]), contrib.dtype)
+    out = out.at[indices].add(contrib)
+    return out.reshape(C * contrib.shape[-2], -1)
+
+
+def _ell_fused(indices, data, xb, yb, num_col_blocks):
+    """One shard, one pass over the tiles: (A x, Aᵀ y).
+
+    indices (R, S), data (R, S, bp, bn), xb (C, bn, k), yb (R, bp, k) ->
+    (R*bp, k) forward product and (C*bn, k) transposed product. The tile
+    data feeds BOTH contractions from a single read — the jnp counterpart
+    of the fused Pallas kernel (``repro.kernels.spmm``), which emits the
+    identical pair from one grid pass.
+    """
+    g = xb[indices]  # gather: (R, S, bn, k)
+    fwd = jnp.einsum("rspb,rsbk->rpk", data, g)
+    contrib = jnp.einsum("rspb,rpk->rsbk", data, yb)
+    R, _, bp, _ = data.shape
+    return (
+        fwd.reshape(R * bp, -1).astype(data.dtype),
+        _scatter_contrib(indices, contrib, num_col_blocks),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_col_blocks",))
+def _ell_fused_stacked(indices, data, xb, yb, num_col_blocks):
+    return jax.vmap(
+        lambda i, d, x, y: _ell_fused(i, d, x, y, num_col_blocks)
+    )(indices, data, xb, yb)
+
+
 def _gram_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
     """Host-side COO of G = A Aᵀ for one sparse block.
 
@@ -280,6 +425,12 @@ class PartitionedBSR:
     shards and make each inner-CG iteration one SMALL SpMV instead of two
     full ones. Blocks are padded to ``p_pad`` rows with zero rows
     (consistent 0·x = 0 equations; see module docstring).
+
+    ``balance=True`` stores the forward/transpose tiles in a per-block
+    balanced row order (``_balance_perm``): ``ext_pos[j, q]`` is the
+    external row at internal position q and ``int_pos[j, q]`` its inverse.
+    The Gram shards and every public product keep the EXTERNAL row order —
+    the permutation never escapes this class.
     """
 
     fwd_indices: jnp.ndarray  # (J, Rp, S) int32
@@ -291,6 +442,8 @@ class PartitionedBSR:
     tra_data: jnp.ndarray | None = None  # (J, Rn, T, bn, bp)
     gram_indices: jnp.ndarray | None = None  # (J, Rp, Sg) int32
     gram_data: jnp.ndarray | None = None  # (J, Rp, Sg, bp, bp)
+    ext_pos: jnp.ndarray | None = None  # (J, p_pad) int32: internal -> external
+    int_pos: jnp.ndarray | None = None  # (J, p_pad) int32: external -> internal
 
     @property
     def num_blocks(self) -> int:
@@ -309,7 +462,7 @@ class PartitionedBSR:
         """Device-resident bytes of the sparse operator (all present parts)."""
         arrs = (
             self.fwd_indices, self.fwd_data, self.tra_indices, self.tra_data,
-            self.gram_indices, self.gram_data,
+            self.gram_indices, self.gram_data, self.ext_pos, self.int_pos,
         )
         return int(sum(a.nbytes for a in arrs if a is not None))
 
@@ -329,6 +482,7 @@ class PartitionedBSR:
         dtype=np.float32,
         with_transpose: bool = False,
         with_gram: bool = False,
+        balance: bool = False,
     ) -> "PartitionedBSR":
         """Partition + convert, entirely without densifying.
 
@@ -336,7 +490,10 @@ class PartitionedBSR:
         space and carves the J forward shards out with
         ``slice_row_blocks``. ``with_transpose`` adds the A_jᵀ shards (only
         the Pallas kernel path needs them); ``with_gram`` adds the sparse
-        G_j = A_j A_jᵀ shards (the inner-CG operator).
+        G_j = A_j A_jᵀ shards (the inner-CG operator). ``balance`` stores
+        the tiles in a per-block load-balanced row order (the ELL slot
+        count ``S`` is a max over block-rows; see ``_balance_perm``) while
+        keeping every public product in the original row order.
         """
         m, n = coo.shape
         bp, bn = block_shape
@@ -362,9 +519,31 @@ class PartitionedBSR:
         coo = COOMatrix(rows, cols, vals, (m, n))
         blk = rows // p
         local = rows % p
-        # global padded layout: block j owns rows [j*p_pad, j*p_pad + p)
+
+        ext_pos = int_pos = None
+        tile_local = local  # internal (tile-layout) row of every entry
+        if balance:
+            ext_np = np.stack(
+                [
+                    _balance_perm(
+                        local[blk == j], cols[blk == j] // bn, p_pad, bp
+                    )
+                    for j in range(J)
+                ]
+            )
+            int_np = np.empty_like(ext_np)
+            np.put_along_axis(
+                int_np, ext_np, np.broadcast_to(
+                    np.arange(p_pad, dtype=np.int32), (J, p_pad)
+                ), axis=1,
+            )
+            tile_local = int_np[blk, local].astype(np.int64)
+            ext_pos, int_pos = jnp.asarray(ext_np), jnp.asarray(int_np)
+
+        # global padded layout: block j owns rows [j*p_pad, j*p_pad + p_pad)
         padded = COOMatrix(
-            (blk * p_pad + local).astype(np.int64), cols, coo.vals, (J * p_pad, n)
+            (blk * p_pad + tile_local).astype(np.int64), cols, coo.vals,
+            (J * p_pad, n),
         )
         full = BlockEll.from_coo(padded, block_shape, dtype)
         shards = [
@@ -379,13 +558,15 @@ class PartitionedBSR:
             tra_idx, tra_data = _stack_shards(
                 [
                     _ell_arrays(
-                        cols[blk == j], local[blk == j], coo.vals[blk == j],
-                        n, p_pad, bn, bp, dtype,
+                        cols[blk == j], tile_local[blk == j],
+                        coo.vals[blk == j], n, p_pad, bn, bp, dtype,
                     )
                     for j in range(J)
                 ]
             )
 
+        # Gram shards stay in the EXTERNAL row order: the inner CG runs on
+        # unpermuted vectors, so its hot loop never touches the permutation
         gram_idx = gram_data = None
         if with_gram:
             gram_idx, gram_data = _stack_shards(
@@ -404,7 +585,22 @@ class PartitionedBSR:
             fwd_idx, fwd_data, (m, n), p, p_pad,
             tra_indices=tra_idx, tra_data=tra_data,
             gram_indices=gram_idx, gram_data=gram_data,
+            ext_pos=ext_pos, int_pos=int_pos,
         )
+
+    # -- balanced-layout translation -----------------------------------------
+
+    def _to_external(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """Internal (tile-layout) block rows (J, p_pad, k) -> external order."""
+        if self.int_pos is None:
+            return rows
+        return rows[jnp.arange(rows.shape[0])[:, None], self.int_pos]
+
+    def _to_internal(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """External block rows (J, p_pad, k) -> internal tile-layout order."""
+        if self.ext_pos is None:
+            return rows
+        return rows[jnp.arange(rows.shape[0])[:, None], self.ext_pos]
 
     # -- products -----------------------------------------------------------
 
@@ -418,8 +614,10 @@ class PartitionedBSR:
         if use_kernels:
             from repro.kernels.spmm import ops as spmm_ops
 
-            return spmm_ops.spmm(self.fwd_indices, self.fwd_data, xb)
-        return _ell_matmul_stacked(self.fwd_indices, self.fwd_data, xb)
+            out = spmm_ops.spmm(self.fwd_indices, self.fwd_data, xb)
+        else:
+            out = _ell_matmul_stacked(self.fwd_indices, self.fwd_data, xb)
+        return self._to_external(out)
 
     def rmatvec(self, y: jnp.ndarray, use_kernels: bool = False) -> jnp.ndarray:
         """A_jᵀ y_j for every block: y (J, p_pad, k) -> (J, n, k).
@@ -430,6 +628,7 @@ class PartitionedBSR:
         """
         n = self.shape[1]
         bp, bn = self.block_shape
+        y = self._to_internal(y)
         if use_kernels or self.tra_indices is not None:
             if self.tra_indices is None:
                 raise ValueError(
@@ -451,6 +650,41 @@ class PartitionedBSR:
         )
         return out[:, :n]
 
+    def fused_project(
+        self, x: jnp.ndarray, y: jnp.ndarray, use_kernels: bool = False
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(A_j x, A_jᵀ y_j) from ONE pass over the forward ELL tiles.
+
+        x (n, k) (broadcast to every block) or (J, n, k); y (J, p_pad, k).
+        Returns the forward product (J, p_pad, k) and the scatter-added
+        transposed product (J, n, k). This is the matfree epoch's tile
+        pass: each tile is read once and feeds both contractions (the
+        Pallas kernel under ``use_kernels=True`` does the same from a
+        single grid pass, staging per-slot transpose contributions that are
+        scatter-added here).
+        """
+        J, n = self.num_blocks, self.shape[1]
+        bp, bn = self.block_shape
+        if x.ndim == 2:
+            x = jnp.broadcast_to(x[None], (J, *x.shape))
+        xb = jax.vmap(lambda v: _pad_cols(v, n, bn))(x)
+        yb = self._to_internal(y).reshape(J, self.p_pad // bp, bp, -1)
+        C = _ceil_div(n, bn)
+        if use_kernels:
+            from repro.kernels.spmm import ops as spmm_ops
+
+            fwd, contrib = spmm_ops.spmm_fused(
+                self.fwd_indices, self.fwd_data, xb, yb
+            )
+            tra = jax.vmap(
+                lambda i, c: _scatter_contrib(i, c, C)
+            )(self.fwd_indices, contrib)
+        else:
+            fwd, tra = _ell_fused_stacked(
+                self.fwd_indices, self.fwd_data, xb, yb, C
+            )
+        return self._to_external(fwd), tra[:, :n]
+
     def gram_mv(self, y: jnp.ndarray, use_kernels: bool = False) -> jnp.ndarray:
         """(A_j A_jᵀ) y_j via the stored sparse Gram shards (or, without
         them, as rmatvec-then-matvec): (J, p_pad, k) -> (J, p_pad, k)."""
@@ -468,7 +702,37 @@ class PartitionedBSR:
         """diag(A_j A_jᵀ) per block — (J, p_pad) row sums of squares, the
         Jacobi preconditioner for the inner CG (zero on padded rows)."""
         sq = jnp.sum(self.fwd_data.astype(jnp.float32) ** 2, axis=(2, 4))
-        return sq.reshape(self.num_blocks, self.p_pad)
+        sq = sq.reshape(self.num_blocks, self.p_pad)
+        if self.int_pos is None:
+            return sq
+        return sq[jnp.arange(self.num_blocks)[:, None], self.int_pos]
+
+    def jacobi_weights(self, eps: float = 1e-10) -> jnp.ndarray:
+        """Inverse Gram diagonal (J, p_pad, 1), the inner-CG Jacobi weights.
+
+        The clamp is RELATIVE — near-zero but nonzero diagonals (badly
+        scaled rows) are bounded at ``1 / (max_block_diag * eps)`` instead
+        of exploding toward 1/tiny, which overflowed the CG step-size
+        arithmetic on badly scaled matrices. Exactly-zero diagonals (the
+        padding rows) keep weight 0 so their iterates stay pinned at zero.
+        """
+        diag = self.gram_diag()
+        floor = jnp.max(diag, axis=1, keepdims=True) * eps
+        return jnp.where(
+            diag > 0, 1.0 / jnp.maximum(diag, floor), 0.0
+        )[..., None]
+
+    def slot_occupancy(self) -> tuple[int, float]:
+        """(S, mean occupied slots per block-row) of the forward shards.
+
+        ``S`` is the padded slot count every block-row pays for;
+        the mean counts tiles with any nonzero data. Their ratio is the ELL
+        padding overhead that ``balance=True`` exists to shrink.
+        """
+        occupied = np.asarray(
+            jnp.any(self.fwd_data != 0, axis=(-1, -2))
+        ).sum(axis=-1)  # (J, Rp) occupied tiles per block-row
+        return int(self.fwd_indices.shape[-1]), float(occupied.mean())
 
     def block_rhs(self, b: np.ndarray) -> jnp.ndarray:
         """RHS (m,) or (m, k) -> (J, p_pad, k), zero-padded like the rows."""
@@ -490,18 +754,22 @@ class PartitionedBSR:
 def _bsr_flatten(op: PartitionedBSR):
     children = (
         op.fwd_indices, op.fwd_data, op.tra_indices, op.tra_data,
-        op.gram_indices, op.gram_data,
+        op.gram_indices, op.gram_data, op.ext_pos, op.int_pos,
     )
     return children, (op.shape, op.p, op.p_pad)
 
 
 def _bsr_unflatten(aux, children):
     shape, p, p_pad = aux
-    fwd_idx, fwd_data, tra_idx, tra_data, gram_idx, gram_data = children
+    (
+        fwd_idx, fwd_data, tra_idx, tra_data, gram_idx, gram_data,
+        ext_pos, int_pos,
+    ) = children
     return PartitionedBSR(
         fwd_idx, fwd_data, shape=shape, p=p, p_pad=p_pad,
         tra_indices=tra_idx, tra_data=tra_data,
         gram_indices=gram_idx, gram_data=gram_data,
+        ext_pos=ext_pos, int_pos=int_pos,
     )
 
 

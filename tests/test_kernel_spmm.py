@@ -92,3 +92,82 @@ def test_blocked_ell_to_dense_roundtrip():
         blocked_ell_to_dense(be.indices, be.data, -(-40 // 8))
     )[:40, :40]
     np.testing.assert_allclose(dense, coo.to_dense(), atol=1e-5)
+
+
+# -- fused projection pass (ISSUE 4 tentpole) --------------------------------
+
+
+def _fused_operands(coo, J, bshape, k, seed):
+    op = _tiles(coo, J, bshape)
+    rng = np.random.default_rng(seed)
+    n = coo.shape[0]
+    x = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+    xb = _tile_view(x, n, bshape[1], J)
+    R = op.fwd_indices.shape[1]
+    y = jnp.asarray(
+        rng.standard_normal((J, R, bshape[0], k)).astype(np.float32)
+    )
+    return op, xb, y
+
+
+@pytest.mark.parametrize("bshape", [(8, 8), (4, 16), (16, 8)])
+def test_spmm_fused_matches_ref(bshape):
+    """One grid pass == (forward SpMM, scatter-added transpose) refs."""
+    from repro.kernels.spmm.ref import spmm_fused_ref
+    from repro.sparse.bsr import _scatter_contrib
+
+    coo = generate_schenk_like(96, sparsity=0.95, seed=1)
+    op, xb, y = _fused_operands(coo, 4, bshape, 5, seed=9)
+    fwd, contrib = ops.spmm_fused(op.fwd_indices, op.fwd_data, xb, y)
+    want_fwd, want_tra = spmm_fused_ref(op.fwd_indices, op.fwd_data, xb, y)
+    np.testing.assert_allclose(
+        fwd, np.asarray(want_fwd).reshape(fwd.shape), atol=1e-4, rtol=1e-4
+    )
+    C = xb.shape[1]
+    tra = jax.vmap(lambda i, c: _scatter_contrib(i, c, C))(
+        op.fwd_indices, contrib
+    )
+    np.testing.assert_allclose(
+        np.asarray(tra), np.asarray(want_tra), atol=1e-4, rtol=1e-4
+    )
+    # the forward half agrees with the plain (unfused) kernel too
+    np.testing.assert_allclose(
+        fwd, np.asarray(ops.spmm(op.fwd_indices, op.fwd_data, xb)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@settings(max_examples=6)
+@given(
+    st.integers(min_value=8, max_value=96),
+    st.integers(min_value=1, max_value=5),
+    st.integers(min_value=0, max_value=3),
+)
+def test_spmm_fused_parity_property(n, k, seed):
+    from repro.kernels.spmm.ref import spmm_fused_ref
+    from repro.sparse.bsr import _scatter_contrib
+
+    coo = generate_schenk_like(n, sparsity=0.9, seed=seed)
+    op, xb, y = _fused_operands(coo, 2, (8, 8), k, seed=seed + 40)
+    fwd, contrib = ops.spmm_fused(op.fwd_indices, op.fwd_data, xb, y)
+    want_fwd, want_tra = spmm_fused_ref(op.fwd_indices, op.fwd_data, xb, y)
+    np.testing.assert_allclose(
+        fwd, np.asarray(want_fwd).reshape(fwd.shape), atol=1e-3, rtol=1e-3
+    )
+    tra = jax.vmap(lambda i, c: _scatter_contrib(i, c, xb.shape[1]))(
+        op.fwd_indices, contrib
+    )
+    np.testing.assert_allclose(
+        np.asarray(tra), np.asarray(want_tra), atol=1e-3, rtol=1e-3
+    )
+
+
+def test_spmm_fused_padding_slots_inert():
+    """All-padding tiles contribute exact zeros to BOTH outputs."""
+    coo = COOMatrix(
+        np.empty(0, np.int32), np.empty(0, np.int32), np.empty(0), (16, 16)
+    )
+    op, xb, y = _fused_operands(coo, 2, (8, 8), 2, seed=1)
+    fwd, contrib = ops.spmm_fused(op.fwd_indices, op.fwd_data, xb, y)
+    np.testing.assert_array_equal(np.asarray(fwd), 0.0)
+    np.testing.assert_array_equal(np.asarray(contrib), 0.0)

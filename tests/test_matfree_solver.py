@@ -35,10 +35,15 @@ def rhs_batch(problem):
     return problem.A @ xs, xs
 
 
-def test_matfree_matches_dense_batched(problem, rhs_batch):
-    """Acceptance: prepare(A, mode='matfree').solve(B) == dense to tol."""
+@pytest.mark.parametrize("gram_solver", ["direct", "pcg"])
+def test_matfree_matches_dense_batched(problem, rhs_batch, gram_solver):
+    """Acceptance: prepare(A, mode='matfree').solve(B) == dense to tol,
+    through BOTH inner Gram solvers (precomputed pinv / Jacobi-PCG)."""
     B, xs = rhs_batch
-    mf = prepare(problem.coo, mode="matfree", num_blocks=8)
+    mf = prepare(
+        problem.coo, mode="matfree", num_blocks=8, gram_solver=gram_solver
+    )
+    assert mf.gram_solver == gram_solver
     dn = prepare(problem.A, mode="dense", num_blocks=8, materialize_p=False)
     r_mf = mf.solve(B, num_epochs=150)
     r_dn = dn.solve(B, num_epochs=150)
@@ -51,6 +56,19 @@ def test_matfree_matches_dense_batched(problem, rhs_batch):
         np.asarray(r_dn.history["residual_sq"]),
         rtol=1e-2, atol=1e-4,
     )
+
+
+def test_matfree_fused_kernel_path_matches(problem, rhs_batch):
+    """use_kernels=True routes the epoch through the fused Pallas pass
+    (interpret mode off-TPU) — same trajectory as the jnp fused path."""
+    B, _ = rhs_batch
+    plain = prepare(problem.coo, mode="matfree", num_blocks=8)
+    kern = prepare(
+        problem.coo, mode="matfree", num_blocks=8, use_kernels=True
+    )
+    a = plain.solve(B[:, :2], num_epochs=25)
+    b = kern.solve(B[:, :2], num_epochs=25)
+    np.testing.assert_allclose(a.x, b.x, atol=1e-4, rtol=1e-4)
 
 
 def test_matfree_single_rhs_and_accuracy(problem):
@@ -152,6 +170,63 @@ def test_pool_holds_both_kinds(problem):
     assert resident[fp_dense]["path"] == "dense"
     assert resident[fp_mat]["path"] == "matfree"
     assert resident[fp_mat]["memory_bytes"] > 0
+
+
+def _straggler_batch(problem, scale=80.0):
+    rng = np.random.default_rng(17)
+    xs = rng.standard_normal((96, 6)).astype(np.float32)
+    xs[:, 2] *= scale  # column 2 is the straggler under an ABSOLUTE tol
+    return (problem.A @ xs).astype(np.float32)
+
+
+@pytest.mark.parametrize("path", ["dense", "matfree"])
+def test_masked_early_exit_straggler_matches_solo(problem, path):
+    """ISSUE 4 acceptance: a batch with one slow column reports per-column
+    iterations_to_tol identical to solo solves (±1 epoch) on BOTH paths,
+    with converged columns frozen in-scan under the mask."""
+    B = _straggler_batch(problem)
+    tol = 1.0
+    if path == "dense":
+        prep = prepare(
+            problem.A, mode="dense", num_blocks=8, materialize_p=False,
+            gamma=2.0, eta=1.9,
+        )
+    else:
+        prep = prepare(
+            problem.coo, mode="matfree", num_blocks=8, gamma=2.0, eta=1.9
+        )
+    batched = prep.solve(B, num_epochs=200, tol=tol)
+    it_batched = batched.iterations_to_tol(tol)
+    it_solo = np.array([
+        prep.solve(B[:, i], num_epochs=200, tol=tol).iterations_to_tol(tol)[0]
+        for i in range(B.shape[1])
+    ])
+    assert np.abs(it_batched - it_solo).max() <= 1
+    # the straggler really is the straggler, and some column froze early
+    assert it_batched[2] == it_batched.max()
+    assert it_batched.min() < 200
+    # frozen columns stop moving: their residual history holds its value
+    trace = np.asarray(batched.history["residual_sq"])
+    i_fast = int(np.argmin(it_batched))
+    e = int(it_batched[i_fast])
+    np.testing.assert_allclose(
+        trace[e:-1, i_fast], trace[e - 1, i_fast], rtol=1e-5
+    )
+
+
+def test_masked_early_exit_accuracy_preserved(problem, rhs_batch):
+    """Freezing at tol must not disturb the still-active columns: the
+    masked solve agrees with the unmasked one wherever the unmasked
+    residual is still above tol."""
+    B, _ = rhs_batch
+    mf = prepare(problem.coo, mode="matfree", num_blocks=8, gamma=2.0, eta=1.9)
+    free = mf.solve(B, num_epochs=150)
+    tol = float(np.sqrt(np.asarray(free.history["residual_sq"])[-1].max()) * 5)
+    masked = mf.solve(B, num_epochs=150, tol=tol)
+    # all columns reached tol, and the frozen solutions still satisfy it
+    final = np.asarray(masked.history["residual_sq"])[-1]
+    assert (final <= tol * tol).all()
+    assert (masked.iterations_to_tol(tol) < 150).all()
 
 
 def test_serving_queue_with_matfree_system(problem, rhs_batch):

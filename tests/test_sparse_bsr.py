@@ -4,6 +4,7 @@ Covers the ISSUE 3 satellite cases explicitly — negative-index validation
 in COOMatrix, empty row blocks, and single-nnz blocks — plus property-style
 conversion roundtrips across shapes and block sizes via ``repro.testing``.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -203,3 +204,127 @@ def test_block_rhs_layout():
         seg = b[j * op.p:(j + 1) * op.p]
         np.testing.assert_array_equal(out[j, : seg.size, 0], seg)
         np.testing.assert_array_equal(out[j, seg.size:, 0], 0.0)
+
+
+# -- balance permutation (ISSUE 4) -------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=16, max_value=120),
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=0, max_value=4),
+)
+def test_balanced_products_match_unbalanced_property(m, k, seed):
+    """The balance permutation must be externally invisible: matvec /
+    rmatvec / gram_mv of the permuted operator agree with the unpermuted
+    one to 1e-6 (ISSUE 4 satellite)."""
+    coo = _random_coo(m, m, density=0.08, seed=seed)
+    plain = PartitionedBSR.from_coo(coo, 2, (8, 8), with_gram=True)
+    bal = PartitionedBSR.from_coo(coo, 2, (8, 8), with_gram=True, balance=True)
+    rng = np.random.default_rng(seed + 50)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((2, plain.p_pad, k)).astype(np.float32))
+    for name, a, b in (
+        ("matvec", plain.matvec(x), bal.matvec(x)),
+        ("rmatvec", plain.rmatvec(y), bal.rmatvec(y)),
+        ("gram_mv", plain.gram_mv(y), bal.gram_mv(y)),
+        ("gram_diag", plain.gram_diag(), bal.gram_diag()),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-6,
+            err_msg=name,
+        )
+
+
+def test_balance_never_pads_more_slots():
+    """The local search starts from the identity grouping, so the balanced
+    layout can never be WORSE than the unbalanced one."""
+    for seed in range(3):
+        coo = generate_schenk_like(256, sparsity=0.985, seed=seed)
+        plain = PartitionedBSR.from_coo(coo, 4, (8, 8))
+        bal = PartitionedBSR.from_coo(coo, 4, (8, 8), balance=True)
+        assert bal.slot_occupancy()[0] <= plain.slot_occupancy()[0]
+
+
+def test_balance_tightens_slots_on_schenk_bench_matrix():
+    """ISSUE 4 acceptance: ELL slots within 1.2x of the per-block-row mean
+    on the (paper-scale) Schenk-like bench matrix — was 1.5-2x unbalanced."""
+    coo = generate_schenk_like(2327, sparsity=0.9985, seed=5)
+    plain = PartitionedBSR.from_coo(coo, 8, (8, 8))
+    bal = PartitionedBSR.from_coo(coo, 8, (8, 8), balance=True)
+    s0, m0 = plain.slot_occupancy()
+    s1, m1 = bal.slot_occupancy()
+    assert s0 / m0 >= 1.5  # the problem the permutation exists to fix
+    assert s1 / m1 <= 1.2
+    assert s1 < s0
+
+
+def test_balanced_pytree_roundtrip_through_jit():
+    """The permutation arrays ride the pytree: a balanced operator passed
+    as a jit OPERAND keeps its external product contract (ISSUE 4
+    satellite)."""
+    coo = generate_schenk_like(96, sparsity=0.95, seed=7)
+    bal = PartitionedBSR.from_coo(
+        coo, 4, (8, 8), with_gram=True, balance=True
+    )
+    leaves, treedef = jax.tree_util.tree_flatten(bal)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert np.asarray(rebuilt.ext_pos).shape == (4, bal.p_pad)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((96, 3)).astype(np.float32))
+
+    @jax.jit
+    def through(op, x):
+        return op.matvec(x), op.rmatvec(op.matvec(x)), op.gram_diag()
+
+    got_mv, got_rmv, got_diag = through(bal, x)
+    plain = PartitionedBSR.from_coo(coo, 4, (8, 8), with_gram=True)
+    np.testing.assert_allclose(
+        np.asarray(got_mv), np.asarray(plain.matvec(x)), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_rmv),
+        np.asarray(plain.rmatvec(plain.matvec(x))), rtol=1e-5, atol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_diag), np.asarray(plain.gram_diag()), atol=1e-4
+    )
+
+
+def test_fused_project_matches_separate_products():
+    """One tile pass == the two separate contractions, balanced or not."""
+    coo = generate_schenk_like(100, sparsity=0.96, seed=2)
+    rng = np.random.default_rng(3)
+    for balance in (False, True):
+        op = PartitionedBSR.from_coo(coo, 4, (8, 8), balance=balance)
+        x = jnp.asarray(rng.standard_normal((100, 4)).astype(np.float32))
+        y = jnp.asarray(
+            rng.standard_normal((4, op.p_pad, 4)).astype(np.float32)
+        )
+        f, g = op.fused_project(x, y)
+        np.testing.assert_allclose(
+            np.asarray(f), np.asarray(op.matvec(x)), atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(op.rmatvec(y)), atol=1e-5
+        )
+
+
+def test_jacobi_weights_relative_clamp():
+    """ISSUE 4 satellite: near-zero but NONZERO Gram diagonals must not
+    explode the Jacobi weights on badly scaled matrices; exactly-zero
+    (padding) diagonals still weigh 0."""
+    # one well-scaled row, one tiny-but-nonzero row, padding rows
+    coo = COOMatrix(
+        np.array([0, 1], np.int32), np.array([0, 1], np.int32),
+        np.array([1.0, 1e-18]), (4, 8),
+    )
+    op = PartitionedBSR.from_coo(coo, 1, (8, 8), with_gram=True)
+    w = np.asarray(op.jacobi_weights())[0, :, 0]
+    diag = np.asarray(op.gram_diag())[0]
+    assert diag[1] > 0  # genuinely nonzero, would have exploded pre-fix
+    assert np.isfinite(w).all()
+    # clamp: bounded by 1 / (max_diag * eps) instead of 1 / 1e-36
+    assert w[1] <= 1.0 / (diag.max() * 1e-10) * (1 + 1e-6)
+    np.testing.assert_array_equal(w[2:], 0.0)  # padding rows stay pinned
