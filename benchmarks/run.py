@@ -65,6 +65,7 @@ def main() -> None:
         roofline,
         serving_queue,
         sparse,
+        sparse_sharded,
         speedup,
     )
 
@@ -78,6 +79,7 @@ def main() -> None:
         "multirhs": lambda: multirhs.run(quick=args.quick),
         "serving": lambda: serving_queue.run(quick=args.quick),
         "sparse": lambda: sparse.run(quick=args.quick),
+        "sparse_sharded": lambda: sparse_sharded.run(quick=args.quick),
     }
     if args.only:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

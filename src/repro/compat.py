@@ -24,6 +24,27 @@ else:  # pragma: no cover - exercised only on old jax
     from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
 
 
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with static replication checking disabled.
+
+    The matfree sharded solver runs ``lax.while_loop``s with SHARD-LOCAL
+    stopping conditions (each device's inner CG exits on its own blocks'
+    residuals); several jax releases have no replication rule for ``while``
+    and require the check off. The flag is ``check_rep`` on older releases
+    and ``check_vma`` on newer ones — probe the signature once and pass
+    whichever exists (or neither, if a future jax drops the knob).
+    """
+    import inspect
+
+    params = inspect.signature(shard_map).parameters
+    kw = {}
+    for name in ("check_rep", "check_vma"):
+        if name in params:
+            kw[name] = False
+            break
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
     """``jax.make_mesh`` with Auto axis types when the installed jax has them.
 

@@ -16,6 +16,7 @@ from repro.core.solver_api import (
     solve,
 )
 from repro.core.matfree import MatrixFreePreparedSolver, prepare_matfree
+from repro.core.matfree_sharded import ShardedMatrixFreeSolver
 from repro.core.apc import solve_apc, setup_classical, classical_factors
 from repro.core.dapc import (
     solve_dapc,
@@ -38,6 +39,7 @@ __all__ = [
     "ColumnResult",
     "PreparedSolver",
     "MatrixFreePreparedSolver",
+    "ShardedMatrixFreeSolver",
     "prepare",
     "prepare_matfree",
     "resolve_path",

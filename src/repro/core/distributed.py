@@ -45,6 +45,19 @@ def _psum(x, axes):
     return jax.lax.psum(x, axes if len(axes) > 1 else axes[0])
 
 
+def _epoch_keys(seed: int, block_axes: Sequence[str], num_epochs: int):
+    """Per-shard, per-epoch PRNG keys for the straggler simulation.
+
+    Folds in the index of EVERY axis in ``block_axes``: on a multi-axis
+    block mesh (e.g. ``("pod", "data")``), shards sharing only their first
+    axis index must still draw independent drop patterns.
+    """
+    key = jax.random.PRNGKey(seed)
+    for ax in block_axes:
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+    return jax.random.split(key, num_epochs)
+
+
 # ---------------------------------------------------------------------------
 # Row-sharded solver (the paper's layout: every worker holds full-width rows)
 # ---------------------------------------------------------------------------
@@ -132,11 +145,7 @@ def solve_sharded(
                 xbar = eta * mean_pub + (1.0 - eta) * xbar  # eq. (7)
             return (xs, pub, xbar), metrics(xbar)
 
-        keys = jax.random.split(
-            jax.random.fold_in(jax.random.PRNGKey(seed),
-                               jax.lax.axis_index(block_axes[0])),
-            num_epochs,
-        )
+        keys = _epoch_keys(seed, block_axes, num_epochs)
         (_, _, xbar), hist = jax.lax.scan(step, (x0s, published, xbar), keys)
         return xbar, hist
 
@@ -262,12 +271,20 @@ def repartition(blocks: jnp.ndarray, bvecs: jnp.ndarray, new_num_blocks: int):
     APC state is reconstructible from (A, b) alone — after elastic scale-up or
     scale-down, re-run setup on the new layout and warm-start the consensus
     from any previous x̄ (consensus is a fixed-point iteration, warm starts
-    are sound)."""
+    are sound).
+
+    ``bvecs`` may be a single RHS ``(J, p)`` or a coalesced batch
+    ``(J, p, k)`` — the trailing RHS axis rides through the re-split
+    unchanged."""
     num_blocks, p, n = blocks.shape
     m = num_blocks * p
     if m % new_num_blocks:
         raise ValueError(f"m={m} rows not divisible into {new_num_blocks} blocks")
     flat_a = blocks.reshape(m, n)
-    flat_b = bvecs.reshape(m)
+    tail = bvecs.shape[2:]  # () single RHS, (k,) coalesced batch
+    flat_b = bvecs.reshape(m, *tail)
     p2 = m // new_num_blocks
-    return flat_a.reshape(new_num_blocks, p2, n), flat_b.reshape(new_num_blocks, p2)
+    return (
+        flat_a.reshape(new_num_blocks, p2, n),
+        flat_b.reshape(new_num_blocks, p2, *tail),
+    )

@@ -198,6 +198,167 @@ def _gram_pinv(op: PartitionedBSR, dtype) -> jnp.ndarray:
     return jnp.asarray(out.astype(dtype))
 
 
+def _local_block_mean(a: jnp.ndarray) -> jnp.ndarray:
+    """(J, n, k) block stack -> (n, k) mean. Single-host: J is ALL blocks."""
+    return jnp.mean(a, axis=0)
+
+
+def _identity(a):
+    return a
+
+
+def consensus_epochs(
+    op: PartitionedBSR,
+    diag_inv: jnp.ndarray,
+    gram_inv: jnp.ndarray | None,
+    bvecs: jnp.ndarray,  # (J_loc, p_pad, k)
+    gamma,
+    eta,
+    ref,  # (n,) | (n, k) | None
+    *,
+    direct: bool,
+    inner_iters: int,
+    inner_tol: float,
+    use_kernels: bool,
+    warm_start: bool,
+    tol2: float | None,
+    num_epochs: int,
+    block_mean=_local_block_mean,
+    reduce_sum=_identity,
+    iters_reduce=_identity,
+):
+    """The fused-projection consensus iteration, mesh-agnostic.
+
+    ``op``/``bvecs`` hold whatever set of partition blocks this caller owns
+    — ALL J blocks on a single host, or one shard's J_loc blocks inside a
+    ``shard_map`` (repro.core.matfree_sharded). The three reduction hooks
+    are the only places global information enters:
+
+      * ``block_mean`` — (J_loc, n, k) -> GLOBAL block mean (n, k). The
+        consensus average of eqs. (5)/(7); sharded callers pass
+        mean-then-``pmean``, the ONE n·k-payload collective of an epoch.
+      * ``reduce_sum`` — per-shard residual partial sums -> global (k,).
+        The k-length residual ``psum``; a sharded caller with no in-scan
+        use for the global residual (no ``tol``) may pass identity and
+        collapse the emitted partials after the scan instead, dropping
+        the epoch to ONE collective.
+      * ``iters_reduce`` — per-shard inner-CG depth counts -> global (k,).
+        Reporting only; the direct Gram path never calls a collective here
+        (its depth is the constant 1), and the PCG path pays one k-length
+        ``pmax`` per epoch for the ``history["inner_iters"]`` metric.
+
+    Everything else — both Gram solvers, the fused tile pass, the balance
+    permutation — is strictly block-local, which is what makes the sharded
+    epoch's collective payload exactly n·k + k.
+
+    To keep that bound at ONE consensus collective, the global block mean
+    ``q = mean_j x_j`` is carried through the scan: the end-of-epoch mean
+    that forms x̄⁺ (eq. 7) is the same value the NEXT epoch's fused operand
+    KNOWN needs, so recomputing it at epoch start would double the payload.
+    Carrying it is float-identical to the historical recompute (same op on
+    the same carried ``xs``).
+
+    Returns ``(x̄ (n, k), history)`` with the same history contract as
+    ``MatrixFreePreparedSolver.solve`` documents.
+    """
+    ones = jnp.ones(bvecs.shape[-1], jnp.int32)
+
+    def mse(xbar):
+        d = xbar - (ref[..., None] if ref.ndim == 1 else ref)
+        return jnp.mean(d * d, axis=0)
+
+    # eqs. (2-3) matfree: min-norm x_j(0) = A_jᵀ (A_jA_jᵀ)⁻¹ b_j
+    if direct:
+        y0 = jnp.einsum("jqp,jpk->jqk", gram_inv, bvecs)
+        setup_iters, r0 = ones, jnp.zeros_like(bvecs)
+    else:
+        y0, setup_iters, r0 = _pcg_gram(
+            op, bvecs, diag_inv, inner_iters, inner_tol, use_kernels,
+        )
+        setup_iters = iters_reduce(setup_iters)
+    x0s = op.rmatvec(y0, use_kernels)
+    # the CG residual hands back w0 = A_j x_j(0) = G y0 for free
+    w0 = bvecs - r0
+    xbar0 = block_mean(x0s)  # eq. (5)
+    z0 = op.matvec(xbar0, use_kernels)  # probe of x̄_0
+
+    def live_step(xs, xbar, q, w, z, ywarm, active):
+        u = z - w  # A_j (x̄ − x_j)
+        if direct:
+            y = jnp.einsum("jqp,jpk->jqk", gram_inv, u)
+            used, r = ones, None
+        else:
+            y, used, r = _pcg_gram(
+                op, u, diag_inv, inner_iters, inner_tol, use_kernels,
+                warm=ywarm if warm_start else None, active=active,
+            )
+            used = iters_reduce(used)
+        # x̄⁺ = KNOWN − (ηγ/J)·Σ_j A_jᵀy_j in exact arithmetic, and KNOWN
+        # needs no transpose product — so the epoch's two tile
+        # contractions run in ONE fused pass. The trajectory itself stays
+        # float-CANONICAL (same op order as the dense consensus); KNOWN
+        # only serves as the fused forward operand, and the probe is
+        # patched with the exact float difference x̄⁺ − KNOWN, keeping z
+        # accurate to ULP instead of compounding reassociation noise
+        # across epochs. q is the CARRIED global mean of xs (see above).
+        known = eta * q + eta * gamma * (xbar - q) + (1.0 - eta) * xbar
+        f, g = op.fused_project(known, y, use_kernels)
+        xs_new = xs + gamma * (xbar[None] - xs - g)  # eq. (6)
+        q_new = block_mean(xs_new)  # the epoch's consensus collective
+        xbar_new = eta * q_new + (1.0 - eta) * xbar  # eq. (7)
+        z_new = f + op.matvec(xbar_new - known, use_kernels)
+        # exact inner solve keeps the paper's A_j x_j = b_j invariant,
+        # so w stays put; inexact CG drifts it by r
+        w_new = w if direct else w + gamma * r
+        if active is not None:
+            col = active[None]  # (1, k) over (n, k) state
+            blk = active[None, None]  # (1, 1, k) over (J, ·, k)
+            xs_new = jnp.where(blk, xs_new, xs)
+            w_new = jnp.where(blk, w_new, w)
+            z_new = jnp.where(blk, z_new, z)
+            xbar_new = jnp.where(col, xbar_new, xbar)
+            q_new = jnp.where(col, q_new, q)
+            used = jnp.where(active, used, 0)
+        return (xs_new, xbar_new, q_new, w_new, z_new, y), used
+
+    def step(carry, _):
+        xs, xbar, q, w, z, ywarm = carry
+        # residual of the CURRENT x̄, read off the carried probe
+        resid = reduce_sum(jnp.sum((z - bvecs) ** 2, axis=(0, 1)))
+        if tol2 is None:
+            carry, used = live_step(xs, xbar, q, w, z, ywarm, None)
+        else:
+            active = resid > tol2
+            carry, used = jax.lax.cond(
+                jnp.any(active),
+                lambda c: live_step(*c, active),
+                lambda c: (c, jnp.zeros_like(ones)),
+                (xs, xbar, q, w, z, ywarm),
+            )
+        out = {"residual_sq": resid, "inner_iters": used}
+        if ref is not None:
+            out["mse"] = mse(carry[1])
+        return carry, out
+
+    init = (x0s, xbar0, xbar0, w0, z0, jnp.zeros_like(y0))
+    (_, xbar, _, _, z, _), hist = jax.lax.scan(
+        step, init, None, length=num_epochs
+    )
+    # the probe is computed at epoch START, so emitted entry t is the
+    # residual of x̄_t: entry 0 is the "initial" metric and the final x̄
+    # gets one fresh probe after the scan
+    rfin = op.matvec(xbar, use_kernels) - bvecs
+    resid_fin = reduce_sum(jnp.sum(rfin * rfin, axis=(0, 1)))
+    emitted = hist.pop("residual_sq")
+    hist["residual_sq"] = jnp.concatenate([emitted[1:], resid_fin[None]])
+    hist["initial"] = {
+        "residual_sq": emitted[0], "inner_iters": setup_iters,
+    }
+    if ref is not None:
+        hist["initial"]["mse"] = mse(xbar0)
+    return xbar, hist
+
+
 @dataclasses.dataclass
 class MatrixFreePreparedSolver:
     """Sparse-operator counterpart of ``PreparedSolver``.
@@ -264,115 +425,18 @@ class MatrixFreePreparedSolver:
         key = (num_epochs, inner_iters, has_ref, tol)
         run = self._jit_cache.get(key)
         if run is None:
-            inner_tol, use_kernels = self.inner_tol, self.use_kernels
-            warm_start = self.warm_start
-            direct = self.gram_solver == "direct"
-            tol2 = None if tol is None else float(tol) ** 2
 
             def solve_phase(op, diag_inv, gram_inv, bvecs, gamma, eta, ref):
-                J = op.num_blocks
-                ones = jnp.ones(bvecs.shape[-1], jnp.int32)
-
-                def mse(xbar):
-                    d = xbar - (ref[..., None] if ref.ndim == 1 else ref)
-                    return jnp.mean(d * d, axis=0)
-
-                # eqs. (2-3) matfree: min-norm x_j(0) = A_jᵀ (A_jA_jᵀ)⁻¹ b_j
-                if direct:
-                    y0 = jnp.einsum("jqp,jpk->jqk", gram_inv, bvecs)
-                    setup_iters, r0 = ones, jnp.zeros_like(bvecs)
-                else:
-                    y0, setup_iters, r0 = _pcg_gram(
-                        op, bvecs, diag_inv, inner_iters, inner_tol,
-                        use_kernels,
-                    )
-                x0s = op.rmatvec(y0, use_kernels)
-                # the CG residual hands back w0 = A_j x_j(0) = G y0 for free
-                w0 = bvecs - r0
-                xbar0 = jnp.mean(x0s, axis=0)  # eq. (5)
-                z0 = op.matvec(xbar0, use_kernels)  # probe of x̄_0
-
-                def live_step(xs, xbar, w, z, ywarm, active):
-                    u = z - w  # A_j (x̄ − x_j)
-                    if direct:
-                        y = jnp.einsum("jqp,jpk->jqk", gram_inv, u)
-                        used, r = ones, None
-                    else:
-                        y, used, r = _pcg_gram(
-                            op, u, diag_inv, inner_iters, inner_tol,
-                            use_kernels,
-                            warm=ywarm if warm_start else None, active=active,
-                        )
-                    # x̄⁺ = KNOWN − (ηγ/J)·Σ_j A_jᵀy_j in exact arithmetic,
-                    # and KNOWN needs no transpose product — so the epoch's
-                    # two tile contractions run in ONE fused pass. The
-                    # trajectory itself stays float-CANONICAL (same op
-                    # order as the dense consensus); KNOWN only serves as
-                    # the fused forward operand, and the probe is patched
-                    # with the exact float difference x̄⁺ − KNOWN, keeping
-                    # z accurate to ULP instead of compounding
-                    # reassociation noise across epochs
-                    q = jnp.mean(xs, axis=0)
-                    known = (
-                        eta * q + eta * gamma * (xbar - q) + (1.0 - eta) * xbar
-                    )
-                    f, g = op.fused_project(known, y, use_kernels)
-                    xs_new = xs + gamma * (xbar[None] - xs - g)  # eq. (6)
-                    xbar_new = (
-                        eta * jnp.mean(xs_new, axis=0) + (1.0 - eta) * xbar
-                    )  # eq. (7)
-                    z_new = f + op.matvec(xbar_new - known, use_kernels)
-                    # exact inner solve keeps the paper's A_j x_j = b_j
-                    # invariant, so w stays put; inexact CG drifts it by r
-                    w_new = w if direct else w + gamma * r
-                    if active is not None:
-                        col = active[None]  # (1, k) over (n, k) state
-                        blk = active[None, None]  # (1, 1, k) over (J, ·, k)
-                        xs_new = jnp.where(blk, xs_new, xs)
-                        w_new = jnp.where(blk, w_new, w)
-                        z_new = jnp.where(blk, z_new, z)
-                        xbar_new = jnp.where(col, xbar_new, xbar)
-                        used = jnp.where(active, used, 0)
-                    return (xs_new, xbar_new, w_new, z_new, y), used
-
-                def step(carry, _):
-                    xs, xbar, w, z, ywarm = carry
-                    # residual of the CURRENT x̄, read off the carried probe
-                    resid = jnp.sum((z - bvecs) ** 2, axis=(0, 1))
-                    if tol2 is None:
-                        carry, used = live_step(xs, xbar, w, z, ywarm, None)
-                    else:
-                        active = resid > tol2
-                        carry, used = jax.lax.cond(
-                            jnp.any(active),
-                            lambda c: live_step(*c, active),
-                            lambda c: (c, jnp.zeros_like(ones)),
-                            (xs, xbar, w, z, ywarm),
-                        )
-                    out = {"residual_sq": resid, "inner_iters": used}
-                    if ref is not None:
-                        out["mse"] = mse(carry[1])
-                    return carry, out
-
-                init = (x0s, xbar0, w0, z0, jnp.zeros_like(y0))
-                (_, xbar, _, z, _), hist = jax.lax.scan(
-                    step, init, None, length=num_epochs
+                return consensus_epochs(
+                    op, diag_inv, gram_inv, bvecs, gamma, eta, ref,
+                    direct=self.gram_solver == "direct",
+                    inner_iters=inner_iters,
+                    inner_tol=self.inner_tol,
+                    use_kernels=self.use_kernels,
+                    warm_start=self.warm_start,
+                    tol2=None if tol is None else float(tol) ** 2,
+                    num_epochs=num_epochs,
                 )
-                # the probe is computed at epoch START, so emitted entry t is
-                # the residual of x̄_t: entry 0 is the "initial" metric and
-                # the final x̄ gets one fresh probe after the scan
-                rfin = op.matvec(xbar, use_kernels) - bvecs
-                resid_fin = jnp.sum(rfin * rfin, axis=(0, 1))
-                emitted = hist.pop("residual_sq")
-                hist["residual_sq"] = jnp.concatenate(
-                    [emitted[1:], resid_fin[None]]
-                )
-                hist["initial"] = {
-                    "residual_sq": emitted[0], "inner_iters": setup_iters,
-                }
-                if ref is not None:
-                    hist["initial"]["mse"] = mse(xbar0)
-                return xbar, hist
 
             run = jax.jit(solve_phase)
             self._jit_cache[key] = run
@@ -455,6 +519,8 @@ def prepare_matfree(
     balance: bool = True,
     gram_solver: str = "auto",
     warm_start: bool = False,
+    mesh=None,
+    block_axes: tuple[str, ...] = ("data",),
 ) -> MatrixFreePreparedSolver:
     """Matfree setup: COO -> partitioned blocked-ELL + inner Gram solver.
 
@@ -469,6 +535,11 @@ def prepare_matfree(
     pure setup cost; the operator contract is order-invariant), and
     ``warm_start`` seeds each epoch's inner CG with the previous epoch's
     Gram solution (PCG path only).
+
+    ``mesh`` places the prepared state block-sharded over the mesh's
+    ``block_axes`` and returns a ``ShardedMatrixFreeSolver`` (same solve
+    contract, shard_map execution — see ``repro.core.matfree_sharded``);
+    ``num_blocks`` must divide evenly over the block-axis devices.
     """
     if method not in MATFREE_METHODS:
         raise ValueError(
@@ -495,10 +566,33 @@ def prepare_matfree(
     gram_inv = _gram_pinv(op, dtype) if gram_solver == "direct" else None
     if inner_iters is None:
         inner_iters = min(op.p_pad, 32)
+
+    cls, placement_kw = MatrixFreePreparedSolver, {}
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core.matfree_sharded import (
+            ShardedMatrixFreeSolver,
+            mesh_block_devices,
+        )
+
+        block_axes = tuple(block_axes)
+        num_devices = mesh_block_devices(mesh, block_axes)
+        if num_blocks % num_devices:
+            raise ValueError(
+                f"num_blocks={num_blocks} not divisible over the "
+                f"{num_devices} devices of mesh axes {block_axes}"
+            )
+        sharding = NamedSharding(mesh, PartitionSpec(block_axes))
+        op = op.place(mesh, block_axes)
+        diag_inv = jax.device_put(diag_inv, sharding)
+        if gram_inv is not None:
+            gram_inv = jax.device_put(gram_inv, sharding)
+        cls = ShardedMatrixFreeSolver
+        placement_kw = {"mesh": mesh, "block_axes": block_axes}
     jax.block_until_ready(diag_inv)
     setup_seconds = time.perf_counter() - t0
 
-    return MatrixFreePreparedSolver(
+    return cls(
         op=op,
         method=method,
         gamma=gamma,
@@ -511,4 +605,5 @@ def prepare_matfree(
         gram_solver=gram_solver,
         gram_inv=gram_inv,
         warm_start=warm_start,
+        **placement_kw,
     )

@@ -348,6 +348,8 @@ def prepare(
     balance: bool = True,
     gram_solver: str = "auto",
     warm_start: bool = False,
+    mesh=None,
+    block_axes: tuple[str, ...] = ("data",),
 ):  # -> PreparedSolver | repro.core.matfree.MatrixFreePreparedSolver
     """Algorithm 1 steps 1–4, b-independent: partition A, factorize every
     block, build the jitted projector. Returns the reusable PreparedSolver.
@@ -362,6 +364,11 @@ def prepare(
     ``inner_tol``/``balance``/``gram_solver``/``warm_start`` only apply to
     the matfree path (see ``repro.core.matfree.prepare_matfree``).
 
+    ``mesh`` (matfree path only) places the blocked-ELL shards over the
+    mesh's ``block_axes`` and returns a ``ShardedMatrixFreeSolver`` whose
+    solve program runs under ``shard_map`` — sparse systems larger than
+    one device, same solve contract (repro.core.matfree_sharded).
+
     Cached per method (dense path):
       * dapc — (W_j, R_j) reduced-QR factors (paper eqs. 1/4);
       * apc  — (A_j⁺, P_j) pseudoinverse + dense projector (the classical
@@ -375,6 +382,12 @@ def prepare(
     if path == "matfree" and mode == "auto" and method not in ("apc", "dapc"):
         path = "dense"  # matfree covers the consensus methods only; auto
         # must not turn a working dgd/cgnr solve into an error
+    if mesh is not None and path != "matfree":
+        raise ValueError(
+            "mesh= shards the matrix-free path; this prepare resolved "
+            f"path={path!r} (use mode='matfree', or solve_sharded for "
+            "dense mesh solves)"
+        )
     if path == "matfree":
         from repro.core import matfree  # deferred: matfree imports SolveResult
 
@@ -383,7 +396,8 @@ def prepare(
             A, method=method, num_blocks=num_blocks, dtype=dtype,
             gamma=gamma, eta=eta, inner_iters=inner_iters,
             inner_tol=inner_tol, use_kernels=use_kernels, balance=balance,
-            gram_solver=gram_solver, warm_start=warm_start, **kw,
+            gram_solver=gram_solver, warm_start=warm_start,
+            mesh=mesh, block_axes=block_axes, **kw,
         )
     if isinstance(A, COOMatrix):
         A = A.to_dense()  # the dense path's per-block decompress, up front

@@ -31,6 +31,8 @@ _PREPARE_KWARGS = (
     "balance",
     "gram_solver",
     "warm_start",
+    "mesh",
+    "block_axes",
 )
 
 

@@ -1,15 +1,19 @@
 """Production mesh construction.
 
-A FUNCTION, not a module-level constant — importing this module never
-touches jax device state (required by the dry-run contract).
+FUNCTIONS, not module-level constants — importing this module touches no
+jax state at all (jax enters via deferred imports), so CLI drivers can
+parse arguments, adjust ``XLA_FLAGS`` (``force_host_device_count``), and
+only then pull in the solver stack.
 """
 from __future__ import annotations
 
-from repro import compat
+import os
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    from repro import compat
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return compat.make_mesh(shape, axes)
@@ -17,4 +21,35 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_debug_mesh():
     """Single-device mesh with the production axis names (CPU tests)."""
+    from repro import compat
+
     return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def force_host_device_count(devices: int, env=None):
+    """Split the host CPU into ``devices`` XLA devices (appends
+    ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``).
+
+    MUST take effect before jax initializes its backends — call it
+    straight after argument parsing, before importing anything that
+    imports jax. The shared bootstrap for every host-local-mesh CLI flag
+    (``launch.solve --mesh``, ``launch.serve_solver --mesh``) and for
+    subprocess environments (``benchmarks/sparse_sharded.py``): pass a
+    mapping via ``env`` to mutate that instead of ``os.environ``. Returns
+    the mutated mapping.
+    """
+    if env is None:
+        env = os.environ
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}"
+    ).strip()
+    return env
+
+
+def make_host_local_mesh(devices: int):
+    """(devices,)-shaped ``("data",)`` mesh — the block-sharded layout the
+    sharded matfree path places its ELL shards over."""
+    from repro import compat
+
+    return compat.make_mesh((devices,), ("data",))

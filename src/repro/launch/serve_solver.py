@@ -42,6 +42,13 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=("auto", "dense", "matfree"),
                     help="execution path for pooled systems (auto = "
                          "nnz/memory estimate per system)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="D",
+                    help="serve through the SHARDED matfree path: pooled "
+                         "systems prepare once block-sharded over a D-device "
+                         "host-local mesh and every coalesced (m, k) batch "
+                         "solves on the mesh (requires --mode matfree; sets "
+                         "--xla_force_host_platform_device_count before jax "
+                         "initializes)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -51,9 +58,26 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if args.mode == "matfree" and args.method not in ("apc", "dapc"):
         ap.error("--mode matfree supports the consensus methods (apc/dapc)")
+    if args.mesh:
+        if args.mode != "matfree":
+            ap.error("--mesh shards the matfree path; pass --mode matfree")
+        if args.num_blocks % args.mesh:
+            ap.error(f"--num-blocks {args.num_blocks} must divide over "
+                     f"--mesh {args.mesh} devices")
+        # must land before jax initializes its backends — hence before
+        # the repro.serving import below
+        from repro.launch.mesh import force_host_device_count
+
+        force_host_device_count(args.mesh)
 
     from repro.serving.queue import ServerStats, SolveServer, replay_trace
     from repro.sparse import make_problem
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_local_mesh
+
+        mesh = make_host_local_mesh(args.mesh)
 
     prob = make_problem(n=args.n, m=args.m, seed=args.seed, dtype=np.float32)
     rng = np.random.default_rng(args.seed + 1)
@@ -72,6 +96,7 @@ def main(argv=None) -> None:
             prepare_kwargs=dict(
                 method=args.method, num_blocks=args.num_blocks,
                 materialize_p=False, mode=args.mode,
+                **({"mesh": mesh} if mesh is not None else {}),
             ),
         ) as server:
             # register the sparse COO for square systems (the matfree path

@@ -4,16 +4,12 @@ Usage:
   PYTHONPATH=src python -m repro.launch.solve --n 1024 --m 4096 --blocks 8 \
       --method dapc --epochs 100
   ... --rhs 32   # serve a 32-RHS batch against one prepared factorization
+  ... --mode matfree --mesh 4   # blocked-ELL shards over a 4-device mesh
 """
 from __future__ import annotations
 
 import argparse
 import json
-
-import numpy as np
-
-from repro.core import prepare
-from repro.sparse import make_problem
 
 
 def main():
@@ -33,11 +29,39 @@ def main():
                     choices=["auto", "dense", "matfree"],
                     help="execution path: dense blocks, matrix-free sparse "
                          "operator, or auto (nnz/memory estimate)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="D",
+                    help="shard the matfree operator over a D-device "
+                         "host-local mesh (sets "
+                         "--xla_force_host_platform_device_count before jax "
+                         "initializes; requires --mode matfree)")
     ap.add_argument("--implicit-p", action="store_true",
                     help="beyond-paper: never materialize the projector")
     ap.add_argument("--kernels", action="store_true",
                     help="route through the Pallas TPU kernels")
     args = ap.parse_args()
+
+    if args.mesh:
+        if args.mode != "matfree":
+            ap.error("--mesh shards the matfree path; pass --mode matfree")
+        if args.blocks % args.mesh:
+            ap.error(f"--blocks {args.blocks} must divide over --mesh "
+                     f"{args.mesh} devices")
+        # must land before jax initializes its backends — hence the
+        # deferred repro/jax imports below
+        from repro.launch.mesh import force_host_device_count
+
+        force_host_device_count(args.mesh)
+
+    import numpy as np
+
+    from repro.core import prepare
+    from repro.sparse import make_problem
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_local_mesh
+
+        mesh = make_host_local_mesh(args.mesh)
 
     prob = make_problem(n=args.n, m=args.m, seed=0, dtype=np.float32)
     kw = {}
@@ -48,7 +72,7 @@ def main():
     A = prob.coo if prob.shape[0] == prob.shape[1] else prob.A
     prep = prepare(
         A, method=args.method, num_blocks=args.blocks, mode=args.mode,
-        gamma=args.gamma, eta=args.eta, **kw,
+        gamma=args.gamma, eta=args.eta, mesh=mesh, **kw,
     )
     if args.rhs > 1:
         rng = np.random.default_rng(1)
@@ -58,15 +82,20 @@ def main():
         b, x_ref = prob.b, prob.x_true
     res = prep.solve(b, num_epochs=args.epochs, x_ref=x_ref)
     mse = np.asarray(res.final_mse)
-    print(json.dumps({
+    out = {
         "method": res.method, "mode": res.mode, "blocks": res.num_blocks,
         "epochs": res.num_epochs, "num_rhs": res.num_rhs,
+        "path": prep.path,
         "setup_seconds": round(prep.setup_seconds, 3),
         "solve_seconds": round(res.wall_seconds, 3),
         "initial_mse": float(np.max(np.asarray(res.history["initial"]["mse"]))),
         "final_mse_max": float(mse.max()),
         "final_residual_sq_max": float(np.max(np.asarray(res.final_residual))),
-    }, indent=1))
+    }
+    if mesh is not None:
+        out["mesh_devices"] = args.mesh
+        out["per_device_mb"] = round(prep.per_device_memory_bytes / 1e6, 3)
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

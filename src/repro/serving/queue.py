@@ -76,6 +76,11 @@ class PreparedPool:
     ``solve``/``num_solves`` contract; ``resident()`` reports which path
     each pooled system took) — register with ``mode="matfree"`` or a
     sparse enough matrix under ``mode="auto"`` to get the sparse kind.
+    Registering with ``mode="matfree", mesh=...`` pools the MESH-backed
+    ``ShardedMatrixFreeSolver``: the system prepares once per shard
+    (blocked-ELL tiles placed 1/D per device) and every coalesced
+    ``(m, k)`` batch the server dispatches solves on the mesh — sparse
+    systems larger than one device served through the same queue.
 
     The registry keeps the raw (A, prepare-kwargs) per fingerprint so an
     evicted entry can be re-prepared on demand — eviction drops the

@@ -164,10 +164,34 @@ def test_repartition_elastic():
     part = partition_system(prob.A, prob.b, 8)
     b2, v2 = distributed.repartition(part.blocks, part.bvecs, 4)
     assert b2.shape == (4, 128, 64)
+    assert v2.shape == (4, 128)  # single-RHS shape unchanged by the fix
     x, hist = distributed.solve_sharded(
         b2, v2, _mesh1(), "tall", num_epochs=5, x_ref=jnp.asarray(prob.x_true)
     )
     assert float(hist["mse"][-1]) < 1e-6  # tall blocks: exact block solves
+
+
+def test_repartition_batched_multi_rhs():
+    """Regression (ISSUE 5): ``repartition`` crashed on coalesced (J, p, k)
+    batches — the documented RHS shape every other sharded entry point
+    accepts — by reshaping ``bvecs`` as if it were (J, p). The trailing k
+    axis must ride through the re-split unchanged."""
+    prob = make_problem(n=64, m=512, seed=8, dtype=np.float32)
+    rng = np.random.default_rng(5)
+    xs = rng.standard_normal((64, 3)).astype(np.float32)
+    part = partition_system(prob.A, prob.A @ xs, 8)
+    assert part.bvecs.shape == (8, 64, 3)
+    b2, v2 = distributed.repartition(part.blocks, part.bvecs, 4)
+    assert b2.shape == (4, 128, 64)
+    assert v2.shape == (4, 128, 3)
+    # the re-split is a pure re-grouping: flattening back gives the same rows
+    np.testing.assert_array_equal(
+        np.asarray(v2).reshape(512, 3), np.asarray(part.bvecs).reshape(512, 3)
+    )
+    _, hist = distributed.solve_sharded(
+        b2, v2, _mesh1(), "tall", num_epochs=5, x_ref=jnp.asarray(xs)
+    )
+    assert float(np.max(np.asarray(hist["mse"])[-1])) < 1e-6
 
 
 MULTI_DEVICE_SCRIPT = textwrap.dedent(
@@ -218,6 +242,58 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent(
     print("batched row-sharded OK", float(np.max(np.asarray(h_bk["mse"])[-1])))
     """
 )
+
+
+STRAGGLER_RNG_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core import distributed
+
+    # the failure mode: with block_axes=("pod", "data"), every shard that
+    # shares a pod index used to fold the SAME axis index into the PRNG key
+    # and therefore drew an identical straggler drop pattern
+    mesh = jax.make_mesh((2, 2), ("pod", "data"))
+    axes = ("pod", "data")
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(axes),), out_specs=P(axes)
+    )
+    def draw(x):
+        keys = distributed._epoch_keys(0, axes, 16)
+        # the per-epoch alive mask solve_sharded draws for one local block
+        mask = jax.vmap(lambda k: jax.random.uniform(k, (1,)) >= 0.3)(keys)
+        return mask.reshape(1, 16).astype(jnp.float32) + 0.0 * jnp.sum(x)
+
+    masks = np.asarray(draw(jnp.zeros((4, 1), jnp.float32)))  # (shard, epoch)
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(masks[i], masks[j]), (
+                f"shards {i} and {j} drew identical straggler masks:\\n{masks}"
+            )
+    print("straggler masks distinct OK")
+    """
+)
+
+
+def test_straggler_rng_decorrelated_across_mesh_axes():
+    """Regression (ISSUE 5): the straggler PRNG key folded in only
+    ``block_axes[0]``, so on a 2-axis block mesh every shard sharing a
+    first-axis index replayed the same drop pattern. Every axis index must
+    enter the key."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", STRAGGLER_RNG_SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=300,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "straggler masks distinct OK" in out.stdout
 
 
 @pytest.mark.slow
