@@ -67,6 +67,7 @@ def main() -> None:
         sparse,
         sparse_sharded,
         speedup,
+        streaming,
     )
 
     # every section returns rows, or (rows, checks) when it has gate metrics
@@ -80,6 +81,7 @@ def main() -> None:
         "serving": lambda: serving_queue.run(quick=args.quick),
         "sparse": lambda: sparse.run(quick=args.quick),
         "sparse_sharded": lambda: sparse_sharded.run(quick=args.quick),
+        "streaming": lambda: streaming.run(quick=args.quick),
     }
     if args.only:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -109,6 +109,7 @@ def epoch_collective_payload(prep, bvecs, num_epochs, tol=None):
     closed = jax.make_jaxpr(run)(
         prep.op, prep.diag_inv, prep.gram_inv, bvecs,
         jnp.asarray(GAMMA, dtype), jnp.asarray(ETA, dtype), None,
+        None,  # x0: the audited program is the cold (no-warm-start) one
     )
     found = _collect_reduces(closed.jaxpr, False, [])
     in_scan = [f for f in found if f[0]]

@@ -1,0 +1,202 @@
+"""Streaming benchmark: prediction-correction sessions vs independent solves.
+
+A drifting right-hand-side trace b_t = A(x_base + drift_t) is the serving
+scenario the ``Session`` API (repro.core.session) exists for: consecutive
+solutions differ by a small smooth drift, so a predict-then-correct update
+only has to dissipate the DRIFT error, not re-solve from scratch. This
+section replays the same trace two ways on each execution path:
+
+  * independent — one cold ``prep.solve(b_t, tol=...)`` per update, the
+                  epochs a session-less client pays;
+  * session     — ``prep.open_session(tol=...)``: extrapolate the solution
+                  drift from the incoming RHS, correct with the consensus
+                  iteration warm-started at the prediction.
+
+Both run with the SAME tolerance and per-column masked early exit, so
+``iterations_to_tol`` is directly comparable — cumulative epochs across the
+trace is the gated quantity, with wall-clock per update reported alongside.
+The tolerance is calibrated from the cold solve's float32 residual floor
+(x3), the same convention the convergence tests use, so "equal accuracy"
+means: every update on both traces converges below one shared tol.
+
+Acceptance gate (ISSUE): session cumulative epochs-to-tol <= 0.5x the
+independent-solve epochs on BOTH the dense path and the matfree path.
+Emits ``BENCH_streaming.json``. Standalone:
+
+    PYTHONPATH=src python benchmarks/streaming.py --quick
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:  # standalone `python benchmarks/streaming.py`
+        sys.path.insert(0, _p)
+
+from repro.core import prepare  # noqa: E402
+from repro.sparse import make_problem  # noqa: E402
+from repro.sparse.io import generate_schenk_like  # noqa: E402
+
+# drift amplitude per component, relative to the O(1) base solution: small
+# against the solution, large against the tolerance — the regime where the
+# prediction saves decades of linear convergence
+DRIFT_AMP = 2e-3
+
+GATE_RATIO = 0.5  # session epochs must be <= this fraction of independent
+
+
+def _drift_rhs(A_dense, x_base, num_updates, seed):
+    """The trace: b_t = A (x_base + amp*sin(omega*t + phase_i)) — smooth
+    per-component oscillation, so consecutive RHS steps are correlated and
+    the session's drift extrapolation has something to extrapolate."""
+    n = x_base.shape[0]
+    phases = np.arange(n) + seed
+    return [
+        (A_dense @ (x_base + DRIFT_AMP * np.sin(0.25 * t + phases)))
+        .astype(A_dense.dtype)
+        for t in range(num_updates)
+    ]
+
+
+def _calibrate_tol(prep, b0, cap) -> float:
+    """Shared tolerance = 3x the cold solve's residual floor at the epoch
+    cap (float32 floor; both traces converge below it comfortably)."""
+    res = prep.solve(b0, num_epochs=cap)
+    floor = float(np.sqrt(np.asarray(res.history["residual_sq"])[-1]))
+    return 3.0 * floor
+
+
+def _below_tol(res, tol) -> bool:
+    """Equal-accuracy check: the final residual of every column <= tol."""
+    return bool(np.all(np.sqrt(np.asarray(res.final_residual)) <= tol))
+
+
+def _replay(prep, bs, tol, cap):
+    """Run the trace both ways; returns the per-path epoch totals + walls."""
+    # independent solves (and program warm-up for the cold (m,) shape)
+    cold_epochs, t0 = 0, time.perf_counter()
+    for b in bs:
+        r = prep.solve(b, num_epochs=cap, tol=tol)
+        assert _below_tol(r, tol), "cold update missed tol"
+        cold_epochs += int(r.iterations_to_tol(tol).sum())
+    cold_wall = time.perf_counter() - t0
+
+    # warm-up session: compiles the warm-started program variant so the
+    # timed replay measures steady state, not jit
+    warm = prep.open_session(num_epochs=cap, tol=tol)
+    for b in bs[:3]:
+        warm.update(b)
+
+    sess = prep.open_session(num_epochs=cap, tol=tol)
+    t0 = time.perf_counter()
+    for b in bs:
+        r = sess.update(b)
+        assert _below_tol(r, tol), "session update missed tol"
+    sess_wall = time.perf_counter() - t0
+    return cold_epochs, cold_wall, sess.total_epochs, sess_wall
+
+
+def run(quick: bool = False, num_updates: int = 12):
+    rows, checks = [], {}
+
+    # --- dense path: the canonical tall consistent system ------------------
+    n, m, cap = (256, 1024, 400) if quick else (384, 1536, 400)
+    prob = make_problem(n=n, m=m, seed=7, dtype=np.float32)
+    rng = np.random.default_rng(11)
+    x_base = rng.standard_normal(n).astype(np.float32)
+    prep = prepare(prob.A, num_blocks=8, materialize_p=False)
+    bs = _drift_rhs(prob.A, x_base, num_updates, seed=0)
+    tol = _calibrate_tol(prep, bs[0], cap)
+    cold_ep, cold_wall, sess_ep, sess_wall = _replay(prep, bs, tol, cap)
+    ratio = sess_ep / cold_ep
+    rows += [
+        {
+            "name": f"streaming/dense_independent_{m}x{n}_T{num_updates}",
+            "us_per_call": cold_wall / num_updates * 1e6,
+            "derived": f"epochs={cold_ep} tol={tol:.2e}",
+        },
+        {
+            "name": f"streaming/dense_session_{m}x{n}_T{num_updates}",
+            "us_per_call": sess_wall / num_updates * 1e6,
+            "derived": (
+                f"epochs={sess_ep} epochs_vs_independent={ratio:.2f}x "
+                f"tol={tol:.2e}"
+            ),
+            "gated": True,
+        },
+    ]
+    checks["dense_epoch_ratio"] = ratio
+    checks["dense_session_epochs"] = sess_ep
+    checks["dense_independent_epochs"] = cold_ep
+    assert ratio <= GATE_RATIO, (
+        f"dense session epochs {sess_ep} vs independent {cold_ep}: "
+        f"{ratio:.2f}x > {GATE_RATIO}x allowed"
+    )
+
+    # --- matfree path: square sparse system, accelerated hyperparams -------
+    ns, cap = (384, 400) if quick else (768, 600)
+    coo = generate_schenk_like(ns, sparsity=0.9985, seed=1)
+    Ad = coo.to_dense().astype(np.float32)
+    x_base = rng.standard_normal(ns).astype(np.float32)
+    prep = prepare(coo, num_blocks=8, mode="matfree", gamma=2.0, eta=1.9)
+    bs = _drift_rhs(Ad, x_base, num_updates, seed=3)
+    tol = _calibrate_tol(prep, bs[0], cap)
+    cold_ep, cold_wall, sess_ep, sess_wall = _replay(prep, bs, tol, cap)
+    ratio = sess_ep / cold_ep
+    rows += [
+        {
+            "name": f"streaming/matfree_independent_{ns}sq_T{num_updates}",
+            "us_per_call": cold_wall / num_updates * 1e6,
+            "derived": f"epochs={cold_ep} tol={tol:.2e}",
+        },
+        {
+            "name": f"streaming/matfree_session_{ns}sq_T{num_updates}",
+            "us_per_call": sess_wall / num_updates * 1e6,
+            "derived": (
+                f"epochs={sess_ep} epochs_vs_independent={ratio:.2f}x "
+                f"tol={tol:.2e}"
+            ),
+            "gated": True,
+        },
+    ]
+    checks["matfree_epoch_ratio"] = ratio
+    checks["matfree_session_epochs"] = sess_ep
+    checks["matfree_independent_epochs"] = cold_ep
+    assert ratio <= GATE_RATIO, (
+        f"matfree session epochs {sess_ep} vs independent {cold_ep}: "
+        f"{ratio:.2f}x > {GATE_RATIO}x allowed"
+    )
+    return rows, checks
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--updates", type=int, default=12)
+    args = ap.parse_args()
+
+    rows, checks = run(quick=args.quick, num_updates=args.updates)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+
+    from benchmarks.record import write_record
+
+    path = write_record("streaming", rows, checks, quick=args.quick)
+    print(f"wrote {path}")
+    print(
+        f"acceptance: dense={checks['dense_epoch_ratio']:.2f}x "
+        f"matfree={checks['matfree_epoch_ratio']:.2f}x "
+        f"(need <={GATE_RATIO}x each) -> PASS"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -9,12 +9,14 @@ from repro.core.partition import (
 )
 from repro.core.solver_api import (
     ColumnResult,
+    PrepareConfig,
     PreparedSolver,
     SolveResult,
     prepare,
     resolve_path,
     solve,
 )
+from repro.core.session import DriftPredictor, Session
 from repro.core.matfree import MatrixFreePreparedSolver, prepare_matfree
 from repro.core.matfree_sharded import ShardedMatrixFreeSolver
 from repro.core.apc import solve_apc, setup_classical, classical_factors
@@ -37,6 +39,9 @@ __all__ = [
     "resolve_mode",
     "SolveResult",
     "ColumnResult",
+    "PrepareConfig",
+    "Session",
+    "DriftPredictor",
     "PreparedSolver",
     "MatrixFreePreparedSolver",
     "ShardedMatrixFreeSolver",

@@ -226,6 +226,7 @@ def consensus_epochs(
     block_mean=_local_block_mean,
     reduce_sum=_identity,
     iters_reduce=_identity,
+    x0=None,  # (n, k) predicted solution, or masked pair ((n, k), (k,))
 ):
     """The fused-projection consensus iteration, mesh-agnostic.
 
@@ -267,17 +268,33 @@ def consensus_epochs(
         d = xbar - (ref[..., None] if ref.ndim == 1 else ref)
         return jnp.mean(d * d, axis=0)
 
-    # eqs. (2-3) matfree: min-norm x_j(0) = A_jᵀ (A_jA_jᵀ)⁻¹ b_j
+    # eqs. (2-3) matfree: min-norm x_j(0) = A_jᵀ (A_jA_jᵀ)⁻¹ b_j — or, with
+    # an ``x0`` warm start (sessions), the PROJECTION of the prediction
+    # onto each block's solution set: x_j(0) = x0 + A_jᵀ(A_jA_jᵀ)⁻¹(b_j −
+    # A_j x0). Shard-local except the one forward product; the masked pair
+    # zeroes cold columns' shift so they take the plain init exactly, and
+    # the carried-probe algebra is untouched: A_j x_j(0) = b_j − r0 holds
+    # for any shift (the shift's forward product cancels), so w0 below is
+    # unchanged.
+    if x0 is not None:
+        xq, mk = x0 if isinstance(x0, tuple) else (x0, None)
+        if mk is not None:
+            xq = jnp.where(mk, xq, jnp.zeros((), xq.dtype))
+        u0 = bvecs - op.matvec(xq, use_kernels)
+    else:
+        xq, u0 = None, bvecs
     if direct:
-        y0 = jnp.einsum("jqp,jpk->jqk", gram_inv, bvecs)
+        y0 = jnp.einsum("jqp,jpk->jqk", gram_inv, u0)
         setup_iters, r0 = ones, jnp.zeros_like(bvecs)
     else:
         y0, setup_iters, r0 = _pcg_gram(
-            op, bvecs, diag_inv, inner_iters, inner_tol, use_kernels,
+            op, u0, diag_inv, inner_iters, inner_tol, use_kernels,
         )
         setup_iters = iters_reduce(setup_iters)
     x0s = op.rmatvec(y0, use_kernels)
-    # the CG residual hands back w0 = A_j x_j(0) = G y0 for free
+    if xq is not None:
+        x0s = x0s + xq
+    # the CG residual hands back w0 = A_j x_j(0) = G y0 (+ A_j x0) for free
     w0 = bvecs - r0
     xbar0 = block_mean(x0s)  # eq. (5)
     z0 = op.matvec(xbar0, use_kernels)  # probe of x̄_0
@@ -415,18 +432,33 @@ class MatrixFreePreparedSolver:
         """What the dense path's (J, p, n) blocks alone would cost."""
         return self.op.dense_bytes
 
+    def _warm_operand(self, x0, batched: bool, dtype):
+        """Normalize an ``x0`` warm start to the internal batched-k shape
+        ((n, k) even for a single RHS — matching ``block_rhs``)."""
+        if x0 is None:
+            return None
+        if isinstance(x0, tuple):
+            arr, mask = x0
+            return (jnp.asarray(arr, dtype), jnp.asarray(mask, bool))
+        arr = np.asarray(x0)
+        if not batched and arr.ndim == 1:
+            arr = arr[:, None]
+        return jnp.asarray(arr, dtype)
+
     def _solve_program(
         self,
         num_epochs: int,
         inner_iters: int,
         has_ref: bool,
         tol: float | None,
+        warm_kind: str | None = None,
     ):
-        key = (num_epochs, inner_iters, has_ref, tol)
+        key = (num_epochs, inner_iters, has_ref, tol, warm_kind)
         run = self._jit_cache.get(key)
         if run is None:
 
-            def solve_phase(op, diag_inv, gram_inv, bvecs, gamma, eta, ref):
+            def solve_phase(op, diag_inv, gram_inv, bvecs, gamma, eta, ref,
+                            x0):
                 return consensus_epochs(
                     op, diag_inv, gram_inv, bvecs, gamma, eta, ref,
                     direct=self.gram_solver == "direct",
@@ -436,6 +468,7 @@ class MatrixFreePreparedSolver:
                     warm_start=self.warm_start,
                     tol2=None if tol is None else float(tol) ** 2,
                     num_epochs=num_epochs,
+                    x0=x0,
                 )
 
             run = jax.jit(solve_phase)
@@ -451,6 +484,7 @@ class MatrixFreePreparedSolver:
         x_ref: np.ndarray | None = None,
         inner_iters: int | None = None,
         tol: float | None = None,
+        x0: np.ndarray | tuple | None = None,
     ) -> SolveResult:
         """Consensus solve against the cached sparse operator.
 
@@ -462,6 +496,13 @@ class MatrixFreePreparedSolver:
         freezes (its consensus update and projector work stop) while the
         batch keeps its one compiled shape — per-column epochs-to-tolerance
         still read out of ``iterations_to_tol`` exactly as without masking.
+
+        ``x0`` warm-starts the consensus state at a predicted solution
+        (the ``Session`` hook, same contract as the dense path): block
+        initial iterates become projections of ``x0`` onto each block's
+        solution set — one extra forward product plus the usual inner Gram
+        solve. ``(n,)``/``(n, k)``, or the masked ``(x0, mask)`` pair for
+        mixed warm/cold serving batches.
         """
         gamma = self.gamma if gamma is None else gamma
         eta = self.eta if eta is None else eta
@@ -471,15 +512,19 @@ class MatrixFreePreparedSolver:
         bvecs = self.op.block_rhs(b)  # (J, p_pad, k) — k=1 for a single RHS
         dtype = self.op.fwd_data.dtype
         ref = None if x_ref is None else jnp.asarray(x_ref, dtype)
+        warm = self._warm_operand(x0, batched, dtype)
 
         t0 = time.perf_counter()
         run = self._solve_program(
             num_epochs, inner_iters, ref is not None,
             None if tol is None else float(tol),
+            warm_kind=None if warm is None else (
+                "masked" if isinstance(warm, tuple) else "x0"
+            ),
         )
         x, hist = run(
             self.op, self.diag_inv, self.gram_inv, bvecs,
-            jnp.asarray(gamma, dtype), jnp.asarray(eta, dtype), ref,
+            jnp.asarray(gamma, dtype), jnp.asarray(eta, dtype), ref, warm,
         )
         x = jax.block_until_ready(x)
         wall = time.perf_counter() - t0
@@ -503,6 +548,14 @@ class MatrixFreePreparedSolver:
             eta=eta,
             num_rhs=b.shape[1] if batched else 1,
         )
+
+    def open_session(self, **kwargs):
+        """Open a streaming prediction-correction ``Session`` over this
+        solver (``repro.core.session``) — same contract as the dense
+        ``PreparedSolver.open_session``; the sharded solver inherits it."""
+        from repro.core.session import Session
+
+        return Session(self, **kwargs)
 
 
 def prepare_matfree(

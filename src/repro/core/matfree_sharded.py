@@ -106,13 +106,18 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
         inner_iters: int,
         has_ref: bool,
         tol: float | None,
+        warm_kind: str | None = None,
     ):
-        key = (num_epochs, inner_iters, has_ref, tol)
+        key = (num_epochs, inner_iters, has_ref, tol, warm_kind)
         run = self._jit_cache.get(key)
         if run is None:
             axes, red = self._axes()
             num_shards = self.num_shards
             sharded = P(axes)
+            # the x0 warm start (sessions) is a REPLICATED (n, k) predicted
+            # solution — every shard projects it onto its own blocks; the
+            # masked serving pair replicates both halves
+            warm_spec = (P(), P()) if warm_kind == "masked" else P()
             in_specs = (
                 self.op.shard_spec(axes),  # operator pytree, block-sharded
                 sharded,  # diag_inv (J, p_pad, 1)
@@ -121,6 +126,7 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
                 P(),  # gamma
                 P(),  # eta
                 P(),  # ref (replicated) or None
+                warm_spec,  # x0 (replicated) or None
             )
             # Without tol, the k-length residual is REPORTING only: emit
             # each shard's partial sum through the out_specs (stacked on
@@ -141,7 +147,8 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
                 hist_spec["mse"] = P()
                 hist_spec["initial"]["mse"] = P()
 
-            def solve_phase(op, diag_inv, gram_inv, bvecs, gamma, eta, ref):
+            def solve_phase(op, diag_inv, gram_inv, bvecs, gamma, eta, ref,
+                            x0):
                 return consensus_epochs(
                     op, diag_inv, gram_inv, bvecs, gamma, eta, ref,
                     direct=self.gram_solver == "direct",
@@ -161,6 +168,7 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
                         else (lambda a: jax.lax.psum(a, red))
                     ),
                     iters_reduce=lambda c: jax.lax.pmax(c, red),
+                    x0=x0,
                 )
 
             inner = shard_map_unchecked(
@@ -172,9 +180,10 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
 
             if partial_resid:
 
-                def run_fn(op, diag_inv, gram_inv, bvecs, gamma, eta, ref):
+                def run_fn(op, diag_inv, gram_inv, bvecs, gamma, eta, ref,
+                           x0):
                     xbar, hist = inner(
-                        op, diag_inv, gram_inv, bvecs, gamma, eta, ref
+                        op, diag_inv, gram_inv, bvecs, gamma, eta, ref, x0
                     )
                     # per-shard partials came back stacked on axis 0:
                     # (D·E, k) / (D·k,) — collapse to the global residuals

@@ -40,6 +40,52 @@ MATFREE_AUTO_DENSITY = 0.01  # auto never goes matfree below 99% sparsity
 MATFREE_AUTO_BYTES = 64 * 1024 * 1024  # ... or when dense blocks fit easily
 
 
+@dataclasses.dataclass(frozen=True)
+class PrepareConfig:
+    """The single source of truth for ``prepare()``'s keyword surface.
+
+    ``prepare(A, PrepareConfig(...))`` and ``prepare(A, method=..., ...)``
+    are equivalent; the dataclass exists so the keyword set is declared
+    ONCE — the one-shot ``solve()`` derives its prepare/solve kwarg split
+    from these fields instead of a hand-maintained tuple (which silently
+    rotted every time ``prepare`` grew a knob), and serving code can pass
+    a typed config around instead of a loose dict.
+
+    Fields mirror ``prepare``'s parameters exactly; see its docstring for
+    semantics. ``kwargs()`` flattens back to the keyword form (no deep
+    copy — mesh objects pass through by reference).
+    """
+
+    method: str = "dapc"
+    num_blocks: int = 8
+    mode: str = "auto"  # BlockMode | "dense" | "matfree"
+    dtype: Any = None
+    gamma: float = 1.0
+    eta: float = 0.9
+    materialize_p: bool = True
+    use_kernels: bool = False
+    block_shape: tuple[int, int] | None = None
+    inner_iters: int | None = None
+    inner_tol: float = 1e-6
+    matfree_threshold_bytes: int | None = None
+    balance: bool = True
+    gram_solver: str = "auto"
+    warm_start: bool = False
+    mesh: Any = None
+    block_axes: tuple[str, ...] = ("data",)
+
+    def kwargs(self) -> dict:
+        """The equivalent ``prepare(A, **kwargs)`` keyword dict."""
+        return {
+            f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+        }
+
+    @classmethod
+    def field_names(cls) -> tuple[str, ...]:
+        """Every keyword ``prepare`` consumes (the derived split's base)."""
+        return tuple(f.name for f in dataclasses.fields(cls))
+
+
 def _density(A) -> float:
     if isinstance(A, COOMatrix):
         m, n = A.shape
@@ -173,6 +219,20 @@ class SolveResult:
         ]
 
 
+def _as_warm_operand(x0, dtype):
+    """Normalize a solve-time ``x0`` warm start to device operands.
+
+    Accepts an ``(n,)``/``(n, k)`` prediction or the masked pair
+    ``(x0, mask)`` the serving layer uses for mixed warm/cold batches
+    (``mask`` is ``(k,)`` bool — True columns take the warm start)."""
+    if x0 is None:
+        return None
+    if isinstance(x0, tuple):
+        arr, mask = x0
+        return (jnp.asarray(arr, dtype), jnp.asarray(mask, bool))
+    return jnp.asarray(x0, dtype)
+
+
 @dataclasses.dataclass
 class PreparedSolver:
     """Partition + per-block factors + jitted projector, cached.
@@ -240,14 +300,34 @@ class PreparedSolver:
 
             # factor arrays enter as jit OPERANDS, not closure constants, so
             # they are never baked into the executable (compile-time + memory)
-            def solve_phase(blocks, factors, proj, bvecs, gamma, eta, ref, warm):
+            def solve_phase(
+                blocks, factors, proj, bvecs, gamma, eta, ref, warm, x0
+            ):
+                # x0 warm start (sessions): the per-block initial solutions
+                # become the PROJECTION of the prediction onto each block's
+                # solution set, x_j(0) = x0 + A_j⁺(b_j − A_j x0) — the
+                # substitution is linear in its RHS, so this reuses the
+                # cached factors on the shifted residual and the whole
+                # consensus state (xs AND x̄) starts near the fixed point.
+                # The masked form (x0, mask) zeroes cold columns' shift, so
+                # they reduce to the plain eq. (2–3) init exactly — one
+                # compiled program serves mixed warm/cold batches.
+                if x0 is not None:
+                    xq, mk = x0 if isinstance(x0, tuple) else (x0, None)
+                    if mk is not None:
+                        xq = jnp.where(mk, xq, jnp.zeros((), xq.dtype))
+                    bv_eff = bvecs - jnp.einsum("jpn,n...->jp...", blocks, xq)
+                else:
+                    xq, bv_eff = None, bvecs
                 if self.method == "dapc":
                     Ws, Rs = factors
                     x0s = dapc.initial_from_factors(
-                        Ws, Rs, bvecs, self.mode, self.use_kernels
+                        Ws, Rs, bv_eff, self.mode, self.use_kernels
                     )
                 else:
-                    x0s = apc.initial_from_pinv(factors[0], bvecs)
+                    x0s = apc.initial_from_pinv(factors[0], bv_eff)
+                if xq is not None:
+                    x0s = x0s + xq
                 if proj_kind == "dense":
                     apply_fn = apc.make_apply(proj)
                 else:
@@ -278,10 +358,20 @@ class PreparedSolver:
         gamma: float | None = None,
         eta: float | None = None,
         x_ref: np.ndarray | None = None,
+        x0: np.ndarray | tuple | None = None,
         **kwargs,
     ) -> SolveResult:
         """Solve A x = b against the cached factors (Algorithm 1 steps 5–8
         plus the per-b substitution); never re-partitions or re-factorizes.
+
+        ``x0`` (consensus methods only) warm-starts the WHOLE consensus
+        state at a predicted solution: each block's initial iterate is the
+        projection of ``x0`` onto its solution set (exact substitution on
+        the cached factors), so a good prediction converges in a handful
+        of epochs — this is the ``Session`` prediction-correction hook.
+        ``x0`` is ``(n,)`` / ``(n, k)``; the serving layer passes the
+        masked pair ``(x0, mask)`` so warm session columns and cold
+        one-shot columns share one compiled batch.
 
         kwargs are forwarded to the method (``avg_every``/``compress``/
         ``xbar0``/``tol`` for the consensus methods, ``tol`` for cgnr,
@@ -296,6 +386,11 @@ class PreparedSolver:
         batched = b.ndim == 2
         bvecs = block_rhs(self.mixer, b, np.dtype(self.blocks.dtype))
         ref = None if x_ref is None else jnp.asarray(x_ref, self.blocks.dtype)
+        if x0 is not None and self.method not in ("apc", "dapc"):
+            raise ValueError(
+                f"x0 warm start needs a consensus method (apc/dapc); "
+                f"this solver runs {self.method!r}"
+            )
 
         t0 = time.perf_counter()
         if self.method in ("apc", "dapc"):
@@ -304,6 +399,7 @@ class PreparedSolver:
             x, hist = run(
                 self.blocks, self.factors, self.projector[1], bvecs,
                 jnp.asarray(gamma), jnp.asarray(eta), ref, xbar0,
+                _as_warm_operand(x0, self.blocks.dtype),
             )
         elif self.method == "cgnr":
             part = Partition(self.blocks, bvecs, self.mode)
@@ -330,10 +426,19 @@ class PreparedSolver:
             num_rhs=b.shape[1] if batched else 1,
         )
 
+    def open_session(self, **kwargs):
+        """Open a streaming prediction-correction ``Session`` over this
+        solver: each ``session.update(b_t)`` predicts the drifted solution
+        from the stream history and corrects with a warm-started consensus
+        solve (``repro.core.session``). Consensus methods only."""
+        from repro.core.session import Session
+
+        return Session(self, **kwargs)
+
 
 def prepare(
     A,  # dense (m, n) array or host COOMatrix
-    method: str = "dapc",
+    method: str | PrepareConfig = "dapc",
     num_blocks: int = 8,
     mode: str = "auto",  # BlockMode | "dense" | "matfree"
     dtype=None,
@@ -353,6 +458,10 @@ def prepare(
 ):  # -> PreparedSolver | repro.core.matfree.MatrixFreePreparedSolver
     """Algorithm 1 steps 1–4, b-independent: partition A, factorize every
     block, build the jitted projector. Returns the reusable PreparedSolver.
+
+    ``method`` may be a ``PrepareConfig`` — ``prepare(A, PrepareConfig(...))``
+    is the typed equivalent of the keyword form (the dataclass is the
+    single source of truth for this signature).
 
     ``mode`` selects the execution path on top of the block regime:
     tall/wide/auto keep their dense-path meaning; ``"dense"`` forces the
@@ -376,12 +485,22 @@ def prepare(
       * dgd  — the 1/λ_max(AᵀA) step size (power iteration);
       * cgnr — nothing beyond the partition (zero-setup baseline).
     """
+    if isinstance(method, PrepareConfig):
+        # prepare(A, PrepareConfig(...)): the dataclass IS the kwargs
+        return prepare(A, **method.kwargs())
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
     path = resolve_path(A, num_blocks, mode, matfree_threshold_bytes)
-    if path == "matfree" and mode == "auto" and method not in ("apc", "dapc"):
-        path = "dense"  # matfree covers the consensus methods only; auto
-        # must not turn a working dgd/cgnr solve into an error
+    if path == "matfree" and method not in ("apc", "dapc"):
+        if mode == "auto":
+            path = "dense"  # matfree covers the consensus methods only;
+            # auto must not turn a working dgd/cgnr solve into an error
+        else:
+            raise ValueError(
+                f"mode='matfree' supports the consensus methods "
+                f"('apc', 'dapc'); got method={method!r} — use one of "
+                "those, or mode='dense'/'auto' for this method"
+            )
     if mesh is not None and path != "matfree":
         raise ValueError(
             "mesh= shards the matrix-free path; this prepare resolved "

@@ -14,25 +14,23 @@ import dataclasses
 from repro.core.prepared import (  # noqa: F401  (re-exported API)
     METHODS,
     ColumnResult,
+    PrepareConfig,
     PreparedSolver,
     SolveResult,
     prepare,
     resolve_path,
 )
 
-# kwargs consumed at prepare() time; everything else forwards to the method
-_PREPARE_KWARGS = (
-    "materialize_p",
-    "use_kernels",
-    "block_shape",
-    "inner_iters",
-    "inner_tol",
-    "matfree_threshold_bytes",
-    "balance",
-    "gram_solver",
-    "warm_start",
-    "mesh",
-    "block_axes",
+# parameters ``solve`` itself names and forwards to prepare explicitly
+_SHARED_KWARGS = ("method", "num_blocks", "mode", "dtype", "gamma", "eta")
+
+# kwargs consumed at prepare() time; everything else forwards to the method.
+# DERIVED from PrepareConfig — the dataclass is the single source of truth
+# for prepare's keyword surface, so a new prepare knob is routed correctly
+# here the moment it gains a config field (no hand-maintained twin list).
+_PREPARE_KWARGS = tuple(
+    name for name in PrepareConfig.field_names()
+    if name not in _SHARED_KWARGS
 )
 
 

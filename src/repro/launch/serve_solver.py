@@ -1,16 +1,24 @@
-"""Solve-serving driver: replay a Poisson arrival trace through the async
+"""Solve-serving driver: replay an arrival trace through the async
 request-coalescing ``SolveServer`` and report throughput / latency / batching.
 
-Requests arrive unevenly in real deployments (Velasevic et al., arXiv:
-2304.10640 motivate exactly this heterogeneity); a Poisson process at
-``--rate`` req/s is the standard stand-in. Each request is one right-hand
-side against the same registered system; the server coalesces whatever is
-pending into ``(m, k)`` batches under the ``--max-batch`` / ``--max-wait-ms``
-policy.
+Two trace shapes:
+
+  * ``--trace poisson`` (default) — independent requests arriving as a
+    Poisson process at ``--rate`` req/s (Velasevic et al., arXiv:2304.10640
+    motivate exactly this heterogeneity); the server coalesces whatever is
+    pending into ``(m, k)`` batches under ``--max-batch``/``--max-wait-ms``.
+  * ``--trace drifting`` — ``--sessions`` concurrent prediction-correction
+    streams (``SolveServer.open_session``), each replaying ``--updates``
+    solves of a smoothly drifting right-hand side b_t = A(x_base + drift_t)
+    with per-component amplitude ``--drift``. Session columns coalesce
+    across streams like ordinary requests but carry their warm starts, so
+    the report shows epochs-per-update against the cold one-shot cost.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_solver --requests 64 --rate 200 \\
       --max-batch 8 --max-wait-ms 5
+  PYTHONPATH=src python -m repro.launch.serve_solver --trace drifting \\
+      --sessions 4 --updates 16
 """
 from __future__ import annotations
 
@@ -49,8 +57,87 @@ def build_parser() -> argparse.ArgumentParser:
                          "solves on the mesh (requires --mode matfree; sets "
                          "--xla_force_host_platform_device_count before jax "
                          "initializes)")
+    ap.add_argument("--trace", default="poisson",
+                    choices=("poisson", "drifting"),
+                    help="poisson: independent one-shot requests; drifting: "
+                         "concurrent prediction-correction session streams "
+                         "over smoothly drifting right-hand sides")
+    ap.add_argument("--sessions", type=int, default=4,
+                    help="[drifting] number of concurrent streams")
+    ap.add_argument("--updates", type=int, default=16,
+                    help="[drifting] solves per stream")
+    ap.add_argument("--drift", type=float, default=2e-3,
+                    help="[drifting] per-component drift amplitude of the "
+                         "underlying solution between updates")
     ap.add_argument("--seed", type=int, default=0)
     return ap
+
+
+def _run_drifting(args, prob, system, server_kwargs, rng) -> None:
+    """Replay ``--sessions`` concurrent prediction-correction streams.
+
+    Every stream tracks its own smoothly drifting solution; the streams
+    step in lockstep so their columns coalesce into shared batches (the
+    serving win streaming adds on top of per-update epoch savings)."""
+    import asyncio
+    import time
+
+    from repro.serving.queue import ServerStats, SolveServer
+
+    n, S, T = args.n, args.sessions, args.updates
+    bases = rng.standard_normal((S, n)).astype(np.float32)
+    phases = np.arange(n)[None, :] + 7.0 * np.arange(S)[:, None]
+
+    def rhs_at(s: int, t: int) -> np.ndarray:
+        xt = bases[s] + args.drift * np.sin(0.25 * t + phases[s])
+        return (prob.A @ xt).astype(np.float32), xt
+
+    async def serve():
+        async with SolveServer(**server_kwargs) as server:
+            fp = server.register(system)
+            await server.submit(fp, rhs_at(0, 0)[0])  # warm the programs
+            server.stats = ServerStats()
+            sessions = [server.open_session(fp) for _ in range(S)]
+
+            async def stream(s: int):
+                out = []
+                for t in range(T):
+                    b, xt = rhs_at(s, t)
+                    res = await sessions[s].update(b)
+                    out.append((res, float(np.abs(res.x - xt).max())))
+                return out
+
+            t0 = time.perf_counter()
+            streams = await asyncio.gather(*(stream(s) for s in range(S)))
+            wall = time.perf_counter() - t0
+            return server, sessions, streams, wall
+
+    server, sessions, streams, wall = asyncio.run(serve())
+
+    iters = np.array([[r.iterations for r, _ in st] for st in streams])  # (S, T)
+    err = max(e for st in streams for _, e in st)
+    total = int(iters.sum())
+    cold = int(iters[:, 0].sum())  # update 0 has no history: the cold cost
+    warm_mean = float(iters[:, 1:].mean()) if T > 1 else float("nan")
+    print(
+        f"system {args.m}x{args.n} method={args.method} "
+        f"J={args.num_blocks} epochs<={args.epochs} tol={args.tol:g}"
+    )
+    print(
+        f"replayed {S} drifting streams x {T} updates "
+        f"(drift {args.drift:g}) in {wall:.3f}s "
+        f"-> {S * T / wall:.1f} updates/s"
+    )
+    print(
+        f"epochs/update: cold(first)={iters[:, 0].mean():.1f} "
+        f"warm(rest)={warm_mean:.1f} "
+        f"-> session total {total} vs ~{cold * T} if every update were cold"
+    )
+    print(
+        f"batches: {server.stats.batches} "
+        f"(mean size {server.stats.mean_batch_size:.2f}); "
+        f"accuracy: max|x - x_true| = {err:.2e}"
+    )
 
 
 def main(argv=None) -> None:
@@ -81,27 +168,35 @@ def main(argv=None) -> None:
 
     prob = make_problem(n=args.n, m=args.m, seed=args.seed, dtype=np.float32)
     rng = np.random.default_rng(args.seed + 1)
+
+    server_kwargs = dict(
+        max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms,
+        num_epochs=args.epochs,
+        tol=args.tol,
+        pool_size=args.pool_size,
+        prepare_kwargs=dict(
+            method=args.method, num_blocks=args.num_blocks,
+            materialize_p=False, mode=args.mode,
+            **({"mesh": mesh} if mesh is not None else {}),
+        ),
+    )
+    # register the sparse COO for square systems (the matfree path then
+    # never densifies); augmented systems are dense by nature
+    system = prob.coo if args.m == args.n else prob.A
+
+    if args.trace == "drifting":
+        _run_drifting(args, prob, system, server_kwargs, rng)
+        return
+
     xs = rng.standard_normal((args.n, args.requests)).astype(np.float32)
     rhs = prob.A @ xs
     gaps = rng.exponential(1.0 / args.rate, size=args.requests)
     gaps[0] = 0.0  # first request fires immediately
 
     async def serve():
-        async with SolveServer(
-            max_batch=args.max_batch,
-            max_wait_ms=args.max_wait_ms,
-            num_epochs=args.epochs,
-            tol=args.tol,
-            pool_size=args.pool_size,
-            prepare_kwargs=dict(
-                method=args.method, num_blocks=args.num_blocks,
-                materialize_p=False, mode=args.mode,
-                **({"mesh": mesh} if mesh is not None else {}),
-            ),
-        ) as server:
-            # register the sparse COO for square systems (the matfree path
-            # then never densifies); augmented systems are dense by nature
-            fp = server.register(prob.coo if args.m == args.n else prob.A)
+        async with SolveServer(**server_kwargs) as server:
+            fp = server.register(system)
             # warm the compiled programs so the trace measures steady state
             await server.submit(fp, rhs[:, 0])
             server.stats = ServerStats()  # report the trace, not the warm-up

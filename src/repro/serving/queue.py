@@ -37,7 +37,8 @@ from typing import Any
 import numpy as np
 
 from repro.core import prepare
-from repro.core.prepared import PreparedSolver
+from repro.core.prepared import ColumnResult, PreparedSolver
+from repro.core.session import SESSION_METHODS, DriftPredictor
 from repro.sparse.matrix import COOMatrix
 
 
@@ -177,17 +178,20 @@ class PreparedPool:
 
 
 @dataclasses.dataclass(frozen=True)
-class RequestResult:
-    """What one coalesced request gets back (its column of the batch)."""
+class RequestResult(ColumnResult):
+    """What one coalesced request gets back: its ``ColumnResult`` view of
+    the batch (same ``index``/``iterations``/``converged`` semantics as
+    ``SolveResult.per_column`` — the serving layer adds queueing metadata,
+    it does not rename the solver's result fields)."""
 
-    x: np.ndarray  # (n,)
-    residual_sq: float  # final ||A x − b||²
-    iterations: int  # epochs to tolerance (num_epochs if no tol / never)
-    converged: bool
-    batch_size: int  # how many requests shared the compiled program
-    column: int  # this request's column index within the batch
-    queue_ms: float  # enqueue → batch dispatch
-    solve_ms: float  # batch dispatch → results ready (shared by the batch)
+    batch_size: int = 0  # how many requests shared the compiled program
+    queue_ms: float = 0.0  # enqueue → batch dispatch
+    solve_ms: float = 0.0  # batch dispatch → results ready (batch-shared)
+
+    @property
+    def column(self) -> int:
+        """This request's column in the coalesced batch (= ``index``)."""
+        return self.index
 
 
 @dataclasses.dataclass
@@ -203,12 +207,13 @@ class ServerStats:
 
 
 class _Pending:
-    __slots__ = ("b", "future", "t_enqueue")
+    __slots__ = ("b", "future", "t_enqueue", "x0")
 
-    def __init__(self, b, future, t_enqueue):
+    def __init__(self, b, future, t_enqueue, x0=None):
         self.b = b
         self.future = future
         self.t_enqueue = t_enqueue
+        self.x0 = x0  # (n,) session warm start, or None (cold request)
 
 
 _SHUTDOWN = object()
@@ -290,6 +295,25 @@ class SolveServer:
 
     async def submit(self, fingerprint: str, b: np.ndarray) -> RequestResult:
         """Submit one right-hand side; resolves when its batch completes."""
+        return await self._enqueue(fingerprint, b)
+
+    def open_session(
+        self, fingerprint: str, predict: str = "auto"
+    ) -> "ServerSession":
+        """Open a prediction-correction stream against one registered
+        system (see ``repro.core.session``): each ``await session.update(b)``
+        rides the ordinary coalescing dispatcher — the session's column
+        batches alongside one-shot ``submit`` columns, carrying its warm
+        start with it. Session state lives entirely client-side in the
+        handle (keyed by fingerprint, not by pool entry), so LRU eviction
+        and re-prepare of the underlying solver are invisible to a stream
+        in flight."""
+        self.pool.num_rows(fingerprint)  # KeyError for unknown systems
+        return ServerSession(self, fingerprint, predict=predict)
+
+    async def _enqueue(
+        self, fingerprint: str, b: np.ndarray, x0: np.ndarray | None = None
+    ) -> RequestResult:
         if self._closed:
             raise RuntimeError("server is closed")
         b = np.asarray(b)
@@ -304,7 +328,7 @@ class SolveServer:
             self._dispatchers[fingerprint] = asyncio.create_task(
                 self._dispatch_loop(fingerprint, queue)
             )
-        queue.put_nowait(_Pending(b, future, loop.time()))
+        queue.put_nowait(_Pending(b, future, loop.time(), x0=x0))
         return await future
 
     # -- batching loop ------------------------------------------------------
@@ -345,6 +369,20 @@ class SolveServer:
         if self.bucket_pad and B.shape[1] < self.max_batch:
             pad = np.zeros((B.shape[0], self.max_batch - B.shape[1]), B.dtype)
             B = np.concatenate([B, pad], axis=1)
+        # session columns carry a warm start; the masked (x0, mask) operand
+        # lets them batch alongside cold one-shot columns in ONE compiled
+        # program (masked-off columns reduce exactly to the plain init)
+        x0_arg = None
+        if any(p.x0 is not None for p in batch):
+            n = next(p.x0 for p in batch if p.x0 is not None).shape[0]
+            k = B.shape[1]  # after bucket padding; padded columns stay cold
+            warm = np.zeros((n, k), B.dtype)
+            mask = np.zeros((k,), bool)
+            for i, p in enumerate(batch):
+                if p.x0 is not None:
+                    warm[:, i] = p.x0
+                    mask[i] = True
+            x0_arg = (warm, mask)
 
         def run():
             # pool.get inside the solver thread: a cache miss re-prepares
@@ -352,11 +390,15 @@ class SolveServer:
             # the pool evicts this entry mid-solve
             prep = self.pool.get(fingerprint)
             kwargs = dict(self.solve_kwargs)
-            if self.tol is not None and prep.method in ("apc", "dapc"):
+            if self.tol is not None and prep.method in SESSION_METHODS:
                 # arm the masked in-scan early exit at the reporting
                 # tolerance: converged (and zero-padded bucket) columns
                 # freeze instead of burning projector work to the epoch cap
                 kwargs.setdefault("tol", self.tol)
+            if x0_arg is not None and prep.method in SESSION_METHODS:
+                # the projection warm start is consensus-only; on other
+                # methods the prediction is silently dropped (cold solve)
+                kwargs["x0"] = x0_arg
             return prep.solve(B, num_epochs=self.num_epochs, **kwargs)
 
         try:
@@ -376,16 +418,68 @@ class SolveServer:
                 continue
             pending.future.set_result(
                 RequestResult(
-                    x=col.x,
-                    residual_sq=col.residual_sq,
-                    iterations=col.iterations,
-                    converged=col.converged,
+                    # widen the ColumnResult into the serving shape (no
+                    # asdict: that would deep-copy the solution vector)
+                    **{f.name: getattr(col, f.name)
+                       for f in dataclasses.fields(col)},
                     batch_size=len(batch),
-                    column=col.index,
                     queue_ms=(t_dispatch - pending.t_enqueue) * 1e3,
                     solve_ms=solve_ms,
                 )
             )
+
+
+class ServerSession:
+    """One prediction-correction stream over a ``SolveServer`` system.
+
+    The server-side twin of ``repro.core.session.Session``: it holds the
+    same ``DriftPredictor`` (identical predict semantics — extrapolate
+    from the RHS drift, warm-start fallback, ``predict="none"`` for cold
+    baselines) but corrects through the coalescing dispatcher instead of
+    a private solve — each ``await update(b_t)`` enqueues one column that
+    batches alongside ordinary ``submit`` traffic, with the prediction
+    attached per column. All stream state lives in this handle: the pool
+    may evict and re-prepare the underlying solver between updates (or a
+    different replica may serve the next batch) without perturbing the
+    stream, because the warm start travels with the request.
+
+    Not safe for concurrent ``update`` calls on one session — a stream is
+    ordered by definition (x_{t} feeds the t+1 prediction). Open one
+    session per stream; many sessions coalesce happily.
+    """
+
+    def __init__(self, server: SolveServer, fingerprint: str,
+                 predict: str = "auto"):
+        self.server = server
+        self.fingerprint = fingerprint
+        self._predictor = DriftPredictor(predict)
+        self._updates = 0
+        self._total_iterations = 0
+
+    @property
+    def num_updates(self) -> int:
+        return self._updates
+
+    @property
+    def total_iterations(self) -> int:
+        """Cumulative reported epochs across the stream's updates — the
+        serving-side analogue of ``Session.total_epochs``."""
+        return self._total_iterations
+
+    def reset(self) -> None:
+        """Forget the stream history; the next update solves cold."""
+        self._predictor.reset()
+
+    async def update(self, b: np.ndarray) -> RequestResult:
+        """Predict from the stream history, enqueue the corrected solve,
+        observe the result. Resolves when the carrying batch completes."""
+        b = np.asarray(b)
+        x0 = self._predictor.predict(b)
+        res = await self.server._enqueue(self.fingerprint, b, x0=x0)
+        self._predictor.observe(b, res.x)
+        self._updates += 1
+        self._total_iterations += int(res.iterations)
+        return res
 
 
 async def replay_trace(

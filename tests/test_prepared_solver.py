@@ -5,10 +5,13 @@
 (b) a batched (m, k) solve must match the per-column sequential solves;
 (c) the QR setup must run exactly once per prepare(), never per solve.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
-from repro.core import dapc, prepare, solve
+from repro.core import PrepareConfig, dapc, prepare, solve
+from repro.core.solver_api import _PREPARE_KWARGS, _SHARED_KWARGS
 from repro.sparse import make_problem
 
 
@@ -136,6 +139,59 @@ def test_per_column_single_rhs(problem):
     assert col.index == 0 and col.x.shape == problem.b.shape[:0] + (96,)
     np.testing.assert_array_equal(col.x, res.x)
     assert col.converged
+
+
+def test_prepare_config_equivalent_to_kwargs(problem):
+    """prepare(A, PrepareConfig(...)) is the same call as the kwargs form —
+    the dataclass is a single source of truth, not a second code path."""
+    cfg = PrepareConfig(num_blocks=8, materialize_p=False)
+    p1 = prepare(problem.A, cfg)
+    p2 = prepare(problem.A, num_blocks=8, materialize_p=False)
+    r1 = p1.solve(problem.b, num_epochs=40)
+    r2 = p2.solve(problem.b, num_epochs=40)
+    np.testing.assert_array_equal(r1.x, r2.x)
+    assert p1.method == p2.method and p1.num_blocks == p2.num_blocks
+
+
+def test_prepare_config_is_prepares_signature():
+    """Every PrepareConfig field is a real prepare() keyword (and nothing
+    in the derived solver-API split is hand-maintained): the config fields
+    partition exactly into solve()-shared names + _PREPARE_KWARGS."""
+    import inspect
+
+    sig = inspect.signature(prepare)
+    for name in PrepareConfig.field_names():
+        assert name in sig.parameters, f"config field {name} not in prepare()"
+    assert set(PrepareConfig.field_names()) == (
+        set(_SHARED_KWARGS) | set(_PREPARE_KWARGS)
+    )
+    assert not (set(_SHARED_KWARGS) & set(_PREPARE_KWARGS))
+    # kwargs() round-trips the field values
+    cfg = PrepareConfig(num_blocks=4, gamma=2.0)
+    kw = cfg.kwargs()
+    assert kw["num_blocks"] == 4 and kw["gamma"] == 2.0
+    assert set(kw) == set(PrepareConfig.field_names())
+    assert dataclasses.is_dataclass(cfg)
+
+
+def test_one_shot_wrapper_routes_prepare_kwargs(problem):
+    """Regression for the derived kwarg split: a prepare-time kwarg passed
+    through the one-shot wrapper must reach prepare(), not the method."""
+    res = solve(problem.A, problem.b, num_blocks=8, num_epochs=10,
+                materialize_p=False, warm_start=False)
+    assert res.x.shape == (96,)
+
+
+def test_explicit_matfree_with_non_consensus_method_raises(problem):
+    """Regression (ISSUE bugfix): an EXPLICIT mode='matfree' with a
+    non-consensus method must raise a clear ValueError at prepare time;
+    mode='auto' silently keeps those methods dense instead."""
+    for method in ("cgnr", "dgd"):
+        with pytest.raises(ValueError, match="matfree.*consensus"):
+            prepare(problem.A, method=method, mode="matfree")
+        prep = prepare(problem.A, method=method, mode="auto",
+                       matfree_threshold_bytes=0)
+        assert prep.path == "dense"
 
 
 def test_prepared_solver_reports_setup_and_solves(problem):

@@ -1,0 +1,360 @@
+"""Streaming Session API (prediction-correction) parity suite.
+
+The contract under test: a drifting-b_t trace solved through a ``Session``
+produces per-update solutions matching independent cold solves at the same
+tolerance — on the dense, matfree, and sharded execution paths — while
+spending a fraction of the epochs. Plus the serving-side twin: session
+columns coalesce with one-shot requests, and a stream survives LRU
+eviction + re-prepare of its solver mid-session.
+
+The sharded in-process tests run the full SPMD program on a 1-device mesh
+(same idiom as test_matfree_sharded); the 4-device check spawns a
+subprocess with ``--xla_force_host_platform_device_count`` so this process
+keeps its single device.
+"""
+import asyncio
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ColumnResult, DriftPredictor, Session, prepare
+from repro.core.session import extrapolate_prediction
+from repro.serving.queue import RequestResult, SolveServer
+from repro.sparse import generate_schenk_like, make_problem
+
+GAMMA, ETA = 2.0, 1.9  # the square-sparse consensus hyperparameters
+
+
+def _drift_rhs(A, x_base, num_updates, amp=2e-3):
+    n = x_base.shape[0]
+    return [
+        (A @ (x_base + amp * np.sin(0.25 * t + np.arange(n))))
+        .astype(np.float32)
+        for t in range(num_updates)
+    ]
+
+
+def _floor_tol(prep, b, cap, **kw):
+    """3x the cold residual floor — the convention the benchmarks use."""
+    res = prep.solve(b, num_epochs=cap, **kw)
+    return float(np.sqrt(np.asarray(res.history["residual_sq"])[-1])) * 3.0
+
+
+def _parity_trace(prep, A_dense, n, cap, seed, **solve_kw):
+    """Shared body: session solutions match independent cold solves at one
+    tol, and the session spends fewer cumulative epochs."""
+    rng = np.random.default_rng(seed)
+    x_base = rng.standard_normal(n).astype(np.float32)
+    bs = _drift_rhs(A_dense, x_base, num_updates=6)
+    tol = _floor_tol(prep, bs[0], cap, **solve_kw)
+
+    sess = prep.open_session(num_epochs=cap, tol=tol, solve_kwargs=solve_kw)
+    cold_epochs = 0
+    for b in bs:
+        res = sess.update(b)
+        cold = prep.solve(b, num_epochs=cap, tol=tol, **solve_kw)
+        cold_epochs += int(cold.iterations_to_tol(tol).sum())
+        # parity: both converged below the SAME tol -> solutions agree to
+        # the tolerance scale (vs the cold solve AND the true residual)
+        assert float(np.sqrt(np.asarray(res.final_residual))) <= tol
+        assert float(np.abs(A_dense @ res.x - b).max()) <= tol
+        np.testing.assert_allclose(res.x, cold.x, atol=5 * tol)
+    assert sess.num_updates == len(bs)
+    assert sess.total_epochs < 0.7 * cold_epochs, (
+        sess.total_epochs, cold_epochs,
+    )
+    return sess
+
+
+def test_dense_session_parity_and_saving():
+    prob = make_problem(n=96, m=384, seed=3, dtype=np.float32)
+    prep = prepare(prob.A, num_blocks=8, materialize_p=False)
+    _parity_trace(prep, prob.A, 96, cap=300, seed=0)
+
+
+def test_matfree_session_parity_and_saving():
+    coo = generate_schenk_like(192, sparsity=0.998, seed=5)
+    A = coo.to_dense().astype(np.float32)
+    prep = prepare(coo, mode="matfree", num_blocks=8, gamma=GAMMA, eta=ETA)
+    _parity_trace(prep, A, 192, cap=400, seed=1)
+
+
+def test_sharded_session_parity_and_saving():
+    coo = generate_schenk_like(192, sparsity=0.998, seed=5)
+    A = coo.to_dense().astype(np.float32)
+    mesh = jax.make_mesh((1,), ("data",))
+    prep = prepare(
+        coo, mode="matfree", num_blocks=8, mesh=mesh, gamma=GAMMA, eta=ETA,
+    )
+    _parity_trace(prep, A, 192, cap=400, seed=2)
+
+
+def test_batched_session_streams_track_independently():
+    """A (m, k) session is k independent streams in one compiled program:
+    per-column iterations must match k solo sessions over the same trace."""
+    prob = make_problem(n=96, m=384, seed=3, dtype=np.float32)
+    prep = prepare(prob.A, num_blocks=8, materialize_p=False)
+    rng = np.random.default_rng(9)
+    xb = rng.standard_normal((96, 3)).astype(np.float32)
+    traces = [
+        np.stack(
+            [(prob.A @ (xb[:, j] + 2e-3 * np.sin(0.25 * t + np.arange(96))))
+             for j in range(3)], axis=1,
+        ).astype(np.float32)
+        for t in range(4)
+    ]
+    tol = _floor_tol(prep, traces[0][:, 0], 300)
+    batched = prep.open_session(num_epochs=300, tol=tol)
+    solo = [prep.open_session(num_epochs=300, tol=tol) for _ in range(3)]
+    for B in traces:
+        rb = batched.update(B)
+        for j in range(3):
+            rs = solo[j].update(B[:, j])
+            assert float(np.abs(rb.x[:, j] - rs.x).max()) <= 5 * tol
+    assert batched.total_epochs <= sum(s.total_epochs for s in solo) * 1.2
+
+
+# -- predictor unit tests ---------------------------------------------------
+
+
+def test_extrapolate_prediction_coefficients():
+    x = np.array([[1.0], [2.0]])
+    dx = np.array([[0.5], [0.5]])
+    db = np.array([[1.0], [0.0]])
+    # constant drift: alpha = 1 -> plain velocity extrapolation
+    np.testing.assert_allclose(
+        extrapolate_prediction(x, dx, db, db), x + dx
+    )
+    # reversing drift: alpha = -1
+    np.testing.assert_allclose(
+        extrapolate_prediction(x, dx, -db, db), x - dx
+    )
+    # orthogonal drift: alpha = 0 -> warm-start fallback
+    orth = np.array([[0.0], [1.0]])
+    np.testing.assert_allclose(
+        extrapolate_prediction(x, dx, orth, db), x
+    )
+    # vanishing previous step degrades to alpha = 0, not a blow-up
+    np.testing.assert_allclose(
+        extrapolate_prediction(x, dx, db, np.zeros_like(db)), x
+    )
+
+
+def test_drift_predictor_modes():
+    b0, b1, b2 = (np.full(4, float(v)) for v in (1, 2, 3))
+    x0, x1 = np.zeros(4), np.ones(4)
+
+    none = DriftPredictor("none")
+    none.observe(b0, x0)
+    assert none.predict(b1) is None  # never warm
+
+    warm = DriftPredictor("warm")
+    assert warm.predict(b0) is None  # cold until history exists
+    warm.observe(b0, x0)
+    np.testing.assert_array_equal(warm.predict(b1), x0)
+
+    auto = DriftPredictor("auto")
+    auto.observe(b0, x0)
+    np.testing.assert_array_equal(auto.predict(b1), x0)  # warm fallback
+    auto.observe(b1, x1)
+    # db == db_prev -> alpha=1 -> x1 + (x1 - x0)
+    np.testing.assert_allclose(auto.predict(b2), x1 + (x1 - x0))
+
+    auto.reset()
+    assert auto.predict(b2) is None
+
+    with pytest.raises(ValueError, match="predict"):
+        DriftPredictor("sometimes")
+
+
+def test_predictor_restarts_history_on_shape_change():
+    p = DriftPredictor("auto")
+    p.observe(np.ones(4), np.zeros(3))
+    p.observe(np.ones(5), np.zeros(2))  # width changed: dx history dropped
+    np.testing.assert_array_equal(p.predict(np.ones(5)), np.zeros(2))
+
+
+def test_open_session_rejects_non_consensus():
+    prob = make_problem(n=96, m=384, seed=3, dtype=np.float32)
+    for method in ("dgd", "cgnr"):
+        prep = prepare(prob.A, method=method, num_blocks=8)
+        with pytest.raises(ValueError, match="consensus"):
+            prep.open_session()
+        with pytest.raises(ValueError, match="consensus"):
+            Session(prep)
+        with pytest.raises(ValueError, match="consensus"):
+            prep.solve(prob.b, num_epochs=5, x0=np.zeros(96))
+
+
+# -- serving-side sessions --------------------------------------------------
+
+
+def _dense_server_setup():
+    prob = make_problem(n=96, m=384, seed=3, dtype=np.float32)
+    rng = np.random.default_rng(4)
+    x_base = rng.standard_normal(96).astype(np.float32)
+    return prob, _drift_rhs(prob.A, x_base, num_updates=5)
+
+
+def test_server_session_coalesces_with_one_shots():
+    """A session update and a one-shot submit against the same system land
+    in ONE batch; the warm column converges in fewer epochs, the cold
+    column is exactly as if it arrived alone."""
+    prob, bs = _dense_server_setup()
+    rng = np.random.default_rng(6)
+
+    async def main():
+        async with SolveServer(
+            max_batch=4, max_wait_ms=20.0, num_epochs=300, tol=1e-3,
+            prepare_kwargs=dict(num_blocks=8, materialize_p=False),
+        ) as srv:
+            fp = srv.register(prob.A)
+            sess = srv.open_session(fp)
+            for b in bs[:3]:  # build stream history
+                await sess.update(b)
+            warm_task = asyncio.create_task(sess.update(bs[3]))
+            cold_rhs = (prob.A @ rng.standard_normal(96)).astype(np.float32)
+            cold_task = asyncio.create_task(srv.submit(fp, cold_rhs))
+            rw, rc = await asyncio.gather(warm_task, cold_task)
+            return rw, rc
+
+    rw, rc = asyncio.run(main())
+    assert isinstance(rw, RequestResult) and isinstance(rc, RequestResult)
+    assert rw.batch_size == 2 and rc.batch_size == 2
+    assert {rw.index, rc.index} == {0, 1}
+    assert rw.column == rw.index  # ColumnResult field names, serving alias
+    assert rw.converged and rc.converged
+    assert rw.iterations < rc.iterations  # the warm start paid off
+
+
+def test_server_session_survives_eviction_and_reprepare():
+    """pool_size=1 with two systems: every flip evicts the other entry, so
+    the stream's solver is re-prepared mid-session — the warm start must
+    keep working because the state lives in the handle, not the pool."""
+    prob, bs = _dense_server_setup()
+    prob2 = make_problem(n=96, m=384, seed=8, dtype=np.float32)
+    rng = np.random.default_rng(5)
+
+    async def main():
+        async with SolveServer(
+            max_batch=2, max_wait_ms=1.0, num_epochs=300, tol=1e-3,
+            pool_size=1,
+            prepare_kwargs=dict(num_blocks=8, materialize_p=False),
+        ) as srv:
+            fp1 = srv.register(prob.A)
+            fp2 = srv.register(prob2.A)
+            sess = srv.open_session(fp1)
+            iters = []
+            for b in bs:
+                r = await sess.update(b)
+                assert r.converged
+                iters.append(r.iterations)
+                # touch the other system -> evicts fp1's PreparedSolver
+                await srv.submit(
+                    fp2, (prob2.A @ rng.standard_normal(96)).astype(np.float32)
+                )
+            return iters, srv.pool.stats
+
+    iters, stats = asyncio.run(main())
+    assert stats.evictions >= 2 * len(bs) - 1  # the pool really thrashed
+    assert stats.prepares >= len(bs)  # fp1 re-prepared between updates
+    # ... and the stream stayed warm regardless: later updates are cheap
+    assert min(iters[1:]) < iters[0] * 0.7, iters
+
+
+def test_server_session_unknown_fingerprint():
+    async def main():
+        async with SolveServer() as srv:
+            with pytest.raises(KeyError):
+                srv.open_session("no-such-system")
+
+    asyncio.run(main())
+
+
+def test_core_and_server_sessions_share_column_shape():
+    """One per-column result vocabulary: ``Session.update(...).per_column``
+    rows and ``ServerSession.update`` results are both ColumnResults with
+    the same fields — callers never translate between report shapes."""
+    prob, bs = _dense_server_setup()
+    prep = prepare(prob.A, num_blocks=8, materialize_p=False)
+    tol = 1e-3
+    sess = prep.open_session(num_epochs=300, tol=tol)
+
+    async def main():
+        async with SolveServer(
+            max_batch=1, max_wait_ms=0.5, num_epochs=300, tol=tol,
+            bucket_pad=False,
+            prepare_kwargs=dict(num_blocks=8, materialize_p=False),
+        ) as srv:
+            ssess = srv.open_session(srv.register(prob.A))
+            return [await ssess.update(b) for b in bs]
+
+    server_results = asyncio.run(main())
+    for b, sr in zip(bs, server_results):
+        (col,) = sess.update(b).per_column(tol)
+        assert isinstance(sr, ColumnResult)
+        assert col.index == sr.index
+        assert col.converged == sr.converged
+        # same solver, same trace, same tol -> same per-update receipts
+        assert abs(col.iterations - sr.iterations) <= 2
+        np.testing.assert_allclose(col.x, sr.x, atol=5 * tol)
+
+
+# -- 4-device sharded session (subprocess) ----------------------------------
+
+MULTI_DEVICE_SESSION_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, numpy as np
+    from repro.core import prepare
+    from repro.sparse import generate_schenk_like
+
+    assert jax.device_count() == 4, jax.device_count()
+    mesh = jax.make_mesh((4,), ("data",))
+    coo = generate_schenk_like(256, sparsity=0.998, seed=5)
+    A = coo.to_dense().astype(np.float32)
+    rng = np.random.default_rng(11)
+    x_base = rng.standard_normal(256).astype(np.float32)
+    bs = [
+        (A @ (x_base + 2e-3 * np.sin(0.25 * t + np.arange(256))))
+        .astype(np.float32)
+        for t in range(6)
+    ]
+
+    sh = prepare(coo, mode="matfree", num_blocks=8, mesh=mesh,
+                 gamma=2.0, eta=1.9)
+    cold = sh.solve(bs[0], num_epochs=400)
+    tol = float(np.sqrt(np.asarray(cold.history["residual_sq"])[-1])) * 3
+
+    sess = sh.open_session(num_epochs=400, tol=tol)
+    cold_epochs = 0
+    for b in bs:
+        res = sess.update(b)
+        ref = sh.solve(b, num_epochs=400, tol=tol)
+        cold_epochs += int(ref.iterations_to_tol(tol).sum())
+        assert float(np.sqrt(np.asarray(res.final_residual))) <= tol
+        np.testing.assert_allclose(res.x, ref.x, atol=5 * tol)
+    assert sess.total_epochs < 0.7 * cold_epochs, (
+        sess.total_epochs, cold_epochs)
+    print("4dev session OK", sess.total_epochs, "vs", cold_epochs)
+    """
+)
+
+
+@pytest.mark.slow
+def test_multi_device_session_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", MULTI_DEVICE_SESSION_SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "4dev session OK" in out.stdout
