@@ -120,7 +120,7 @@ def main() -> None:
         help="directory holding the freshly produced records",
     )
     ap.add_argument(
-        "--sections", default="sparse,kernels,sparse_sharded,streaming",
+        "--sections", default="sparse,kernels,sparse_sharded,streaming,serving_qos",
         help="comma-separated section names to compare",
     )
     ap.add_argument("--max-regression", type=float, default=0.25)

@@ -63,6 +63,7 @@ def main() -> None:
         multirhs,
         record,
         roofline,
+        serving_qos,
         serving_queue,
         sparse,
         sparse_sharded,
@@ -79,6 +80,7 @@ def main() -> None:
         "roofline": lambda: roofline.run(quick=args.quick),
         "multirhs": lambda: multirhs.run(quick=args.quick),
         "serving": lambda: serving_queue.run(quick=args.quick),
+        "serving_qos": lambda: serving_qos.run(quick=args.quick),
         "sparse": lambda: sparse.run(quick=args.quick),
         "sparse_sharded": lambda: sparse_sharded.run(quick=args.quick),
         "streaming": lambda: streaming.run(quick=args.quick),

@@ -33,7 +33,7 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
         sys.path.insert(0, _p)
 
 from repro.core import prepare  # noqa: E402
-from repro.serving.queue import ServerStats, SolveServer, replay_trace  # noqa: E402
+from repro.serving.queue import SolveServer, replay_trace  # noqa: E402
 from repro.sparse import make_problem  # noqa: E402
 
 MAX_BATCH = 8
@@ -71,11 +71,11 @@ def run(quick: bool = False, num_requests: int = 64):
         ) as server:
             fp = server.register(prob.A)
             await server.submit(fp, rhs[:, 0])  # warm the (m, MAX_BATCH) program
-            server.stats = ServerStats()  # don't count the warm-up in the trace
+            server.reset_stats()  # don't count the warm-up in the trace
             t0 = time.perf_counter()
             results = await replay_trace(server, fp, rhs, gaps)
             wall = time.perf_counter() - t0
-            return server.stats, results, wall
+            return server.stats(), results, wall
 
     burst_stats, burst, t_coal = asyncio.run(serve(np.zeros(num_requests)))
 
@@ -106,8 +106,8 @@ def run(quick: bool = False, num_requests: int = 64):
             "derived": (
                 f"total={t_coal:.3f}s throughput={num_requests / t_coal:.1f}req/s "
                 f"speedup_vs_sequential={speedup:.2f}x "
-                f"batches={burst_stats.batches} "
-                f"mean_batch={burst_stats.mean_batch_size:.2f} "
+                f"batches={burst_stats['batches']} "
+                f"mean_batch={burst_stats['mean_batch_size']:.2f} "
                 f"p50={bp['p50_ms']:.1f}ms p99={bp['p99_ms']:.1f}ms "
                 f"maxerr={err:.1e}"
             ),
@@ -118,9 +118,9 @@ def run(quick: bool = False, num_requests: int = 64):
             "derived": (
                 f"total={t_poisson:.3f}s offered_rate={rate:.0f}req/s "
                 f"served={num_requests / t_poisson:.1f}req/s "
-                f"batches={poisson_stats.batches} "
-                f"mean_batch={poisson_stats.mean_batch_size:.2f} "
-                f"timeout_flushes={poisson_stats.timeout_flushes} "
+                f"batches={poisson_stats['batches']} "
+                f"mean_batch={poisson_stats['mean_batch_size']:.2f} "
+                f"timeout_flushes={poisson_stats['timeout_flushes']} "
                 f"p50={pp['p50_ms']:.1f}ms p99={pp['p99_ms']:.1f}ms"
             ),
         },
@@ -132,7 +132,7 @@ def run(quick: bool = False, num_requests: int = 64):
         "burst_p99_ms": bp["p99_ms"],
         "poisson_p50_ms": pp["p50_ms"],
         "poisson_p99_ms": pp["p99_ms"],
-        "poisson_mean_batch": poisson_stats.mean_batch_size,
+        "poisson_mean_batch": poisson_stats["mean_batch_size"],
     }
     return rows, checks
 

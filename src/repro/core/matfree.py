@@ -80,7 +80,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.prepared import SolveResult
+from repro.core.prepared import SolveOptions, SolveResult
 from repro.sparse.bsr import DEFAULT_BLOCK_SHAPE, PartitionedBSR
 from repro.sparse.matrix import COOMatrix
 
@@ -503,7 +503,13 @@ class MatrixFreePreparedSolver:
         solution set — one extra forward product plus the usual inner Gram
         solve. ``(n,)``/``(n, k)``, or the masked ``(x0, mask)`` pair for
         mixed warm/cold serving batches.
+
+        ``num_epochs`` may be a ``SolveOptions``: ``solve(b,
+        SolveOptions(...))`` is the typed equivalent of the kwargs form
+        (same declared surface on every path, including sharded).
         """
+        if isinstance(num_epochs, SolveOptions):
+            return self.solve(b, **num_epochs.kwargs())
         gamma = self.gamma if gamma is None else gamma
         eta = self.eta if eta is None else eta
         inner_iters = self.inner_iters if inner_iters is None else inner_iters
@@ -556,6 +562,56 @@ class MatrixFreePreparedSolver:
         from repro.core.session import Session
 
         return Session(self, **kwargs)
+
+    # -- checkpoint serialization (repro.serving.checkpoint) -----------------
+
+    def to_state(self) -> tuple[dict, dict]:
+        """``(arrays, meta)`` capturing everything ``prepare_matfree`` built:
+        the partitioned ELL operator (tiles, balance permutation, Gram
+        shards), the Jacobi weights, and the direct path's Gram
+        pseudo-inverses — i.e. the whole setup cost, so ``from_state`` is a
+        warm restore. Mesh placement is NOT captured (the sharded subclass
+        is rejected by the checkpoint store and re-prepared instead)."""
+        arrays, op_meta = self.op.to_arrays()
+        arrays["diag_inv"] = np.asarray(self.diag_inv)
+        if self.gram_inv is not None:
+            arrays["gram_inv"] = np.asarray(self.gram_inv)
+        meta = {
+            "path": "matfree",
+            "method": self.method,
+            "gamma": float(self.gamma),
+            "eta": float(self.eta),
+            "inner_iters": int(self.inner_iters),
+            "inner_tol": float(self.inner_tol),
+            "use_kernels": bool(self.use_kernels),
+            "setup_seconds": float(self.setup_seconds),
+            "gram_solver": self.gram_solver,
+            "warm_start": bool(self.warm_start),
+            "op": op_meta,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays, meta: dict) -> "MatrixFreePreparedSolver":
+        """Rebuild from ``to_state`` output — same operator bytes, so
+        ``solve`` results are bit-identical to the saved solver's."""
+        return cls(
+            op=PartitionedBSR.from_arrays(arrays, meta["op"]),
+            method=meta["method"],
+            gamma=meta["gamma"],
+            eta=meta["eta"],
+            inner_iters=int(meta["inner_iters"]),
+            inner_tol=float(meta["inner_tol"]),
+            use_kernels=meta["use_kernels"],
+            setup_seconds=meta["setup_seconds"],
+            diag_inv=jnp.asarray(arrays["diag_inv"]),
+            gram_solver=meta["gram_solver"],
+            gram_inv=(
+                jnp.asarray(arrays["gram_inv"]) if "gram_inv" in arrays
+                else None
+            ),
+            warm_start=meta["warm_start"],
+        )
 
 
 def prepare_matfree(

@@ -86,6 +86,57 @@ class PrepareConfig:
         return tuple(f.name for f in dataclasses.fields(cls))
 
 
+@dataclasses.dataclass(frozen=True)
+class SolveOptions:
+    """The single source of truth for ``solve()``'s keyword surface.
+
+    The solve-side mirror of ``PrepareConfig``: ``prep.solve(b,
+    SolveOptions(...))`` and ``prep.solve(b, num_epochs=..., ...)`` are
+    equivalent on every execution path (dense, matfree, sharded — the
+    options object is accepted POSITIONALLY where ``num_epochs`` sits, so
+    no call site changes shape). Declaring the keyword set once lets the
+    serving layer derive which request fields key a coalesced batch
+    (``repro.serving.policy``) instead of hand-maintaining a twin list.
+
+    ``None`` means "unset — use the solver's default"; only set fields are
+    forwarded, so an option inapplicable to a path (``inner_iters`` on the
+    dense solver) costs nothing unless explicitly set. ``method_kwargs``
+    carries method-specific extras (``lr`` for dgd, ``avg_every``/
+    ``compress``/``xbar0`` for the consensus methods) verbatim.
+    """
+
+    num_epochs: int = 100
+    tol: float | None = None
+    gamma: float | None = None
+    eta: float | None = None
+    x0: Any = None  # (n,) | (n, k) | (x0, mask) warm start (consensus only)
+    x_ref: Any = None
+    inner_iters: int | None = None  # matfree paths only
+    method_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def kwargs(self) -> dict:
+        """The equivalent ``solve(b, **kwargs)`` keyword dict (set fields
+        only; ``num_epochs`` always — it is the positional slot)."""
+        out: dict = {}
+        for f in dataclasses.fields(self):
+            if f.name == "method_kwargs":
+                continue
+            value = getattr(self, f.name)
+            if f.name == "num_epochs" or value is not None:
+                out[f.name] = value
+        out.update(self.method_kwargs)
+        return out
+
+    @classmethod
+    def field_names(cls) -> tuple[str, ...]:
+        """Every keyword ``solve`` consumes (the derived surface; excludes
+        the ``method_kwargs`` passthrough)."""
+        return tuple(
+            f.name for f in dataclasses.fields(cls)
+            if f.name != "method_kwargs"
+        )
+
+
 def _density(A) -> float:
     if isinstance(A, COOMatrix):
         m, n = A.shape
@@ -379,7 +430,13 @@ class PreparedSolver:
         early exit: columns that reach ``residual_sq <= tol²`` freeze
         in-scan (``repro.core.consensus``) while the batch keeps one
         compiled shape — matching the matfree path's ``solve(tol=...)``.
+
+        ``num_epochs`` may be a ``SolveOptions`` — ``solve(b,
+        SolveOptions(...))`` is the typed equivalent of the keyword form
+        (the dataclass is the single source of truth for this signature).
         """
+        if isinstance(num_epochs, SolveOptions):
+            return self.solve(b, **num_epochs.kwargs())
         gamma = self.gamma if gamma is None else gamma
         eta = self.eta if eta is None else eta
         b = np.asarray(b)
@@ -434,6 +491,100 @@ class PreparedSolver:
         from repro.core.session import Session
 
         return Session(self, **kwargs)
+
+    # -- checkpoint serialization (repro.serving.checkpoint) -----------------
+
+    def to_state(self) -> tuple[dict, dict]:
+        """Everything needed to rebuild this solver without re-factorizing:
+        ``(arrays, meta)`` with plain numpy arrays and JSON-able metadata.
+
+        The arrays ARE the expensive part of ``prepare`` (partition + QR /
+        pseudo-inverse factors); restoring them via ``from_state`` costs
+        file IO instead of the O(J·p·n²) factorization. When the projector
+        operand aliases a factor array (implicit/kernels dapc, classical
+        apc) only the reference is recorded, never a second copy.
+        """
+        arrays: dict = {"blocks": np.asarray(self.blocks)}
+        factors_meta: list[dict] = []
+        for i, f in enumerate(self.factors):
+            if hasattr(f, "shape"):
+                arrays[f"factor_{i}"] = np.asarray(f)
+                factors_meta.append({"kind": "array", "key": f"factor_{i}"})
+            else:
+                factors_meta.append({"kind": "scalar", "value": float(f)})
+        projector_meta = None
+        if self.projector:
+            kind, operand = self.projector
+            ref = next(
+                (i for i, f in enumerate(self.factors) if f is operand), None
+            )
+            if ref is None:
+                arrays["projector"] = np.asarray(operand)
+                projector_meta = {"kind": kind, "key": "projector"}
+            else:
+                projector_meta = {"kind": kind, "factor": ref}
+        if self.mixer.g is not None:
+            arrays["mixer_g"] = np.asarray(self.mixer.g)
+        meta = {
+            "path": "dense",
+            "method": self.method,
+            "mode": self.mode,
+            "gamma": float(self.gamma),
+            "eta": float(self.eta),
+            "materialize_p": bool(self.materialize_p),
+            "use_kernels": bool(self.use_kernels),
+            "setup_seconds": float(self.setup_seconds),
+            "mixer": {
+                "m": int(self.mixer.m),
+                "num_blocks": int(self.mixer.num_blocks),
+                "p": int(self.mixer.p),
+            },
+            "factors": factors_meta,
+            "projector": projector_meta,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays, meta: dict) -> "PreparedSolver":
+        """Rebuild a solver from ``to_state`` output (warm restore).
+
+        The restored solver is functionally identical to the one saved —
+        same factor bytes, so ``solve`` results are bit-identical — with a
+        fresh jit cache and a zeroed ``num_solves``.
+        """
+        from repro.sparse.matrix import RowMixer
+
+        factors = tuple(
+            jnp.asarray(arrays[spec["key"]])
+            if spec["kind"] == "array" else spec["value"]
+            for spec in meta["factors"]
+        )
+        projector: tuple = ()
+        spec = meta["projector"]
+        if spec is not None:
+            operand = (
+                factors[spec["factor"]] if "factor" in spec
+                else jnp.asarray(arrays[spec["key"]])
+            )
+            projector = (spec["kind"], operand)
+        mx = meta["mixer"]
+        mixer = RowMixer(
+            m=int(mx["m"]), num_blocks=int(mx["num_blocks"]), p=int(mx["p"]),
+            g=np.asarray(arrays["mixer_g"]) if "mixer_g" in arrays else None,
+        )
+        return cls(
+            blocks=jnp.asarray(arrays["blocks"]),
+            mode=meta["mode"],
+            mixer=mixer,
+            method=meta["method"],
+            gamma=meta["gamma"],
+            eta=meta["eta"],
+            materialize_p=meta["materialize_p"],
+            use_kernels=meta["use_kernels"],
+            factors=factors,
+            projector=projector,
+            setup_seconds=meta["setup_seconds"],
+        )
 
 
 def prepare(

@@ -16,6 +16,7 @@ from repro.core.prepared import (  # noqa: F401  (re-exported API)
     ColumnResult,
     PrepareConfig,
     PreparedSolver,
+    SolveOptions,
     SolveResult,
     prepare,
     resolve_path,

@@ -46,6 +46,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--pool-size", type=int, default=4)
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="persistent factor checkpoint store: pool misses "
+                         "warm-restore prepared factors from DIR (keyed by "
+                         "matrix fingerprint) instead of re-factorizing, and "
+                         "fresh prepares are written through — survives "
+                         "process restarts")
     ap.add_argument("--mode", default="auto",
                     choices=("auto", "dense", "matfree"),
                     help="execution path for pooled systems (auto = "
@@ -82,7 +88,7 @@ def _run_drifting(args, prob, system, server_kwargs, rng) -> None:
     import asyncio
     import time
 
-    from repro.serving.queue import ServerStats, SolveServer
+    from repro.serving.queue import SolveServer
 
     n, S, T = args.n, args.sessions, args.updates
     bases = rng.standard_normal((S, n)).astype(np.float32)
@@ -96,7 +102,7 @@ def _run_drifting(args, prob, system, server_kwargs, rng) -> None:
         async with SolveServer(**server_kwargs) as server:
             fp = server.register(system)
             await server.submit(fp, rhs_at(0, 0)[0])  # warm the programs
-            server.stats = ServerStats()
+            server.reset_stats()
             sessions = [server.open_session(fp) for _ in range(S)]
 
             async def stream(s: int):
@@ -110,9 +116,9 @@ def _run_drifting(args, prob, system, server_kwargs, rng) -> None:
             t0 = time.perf_counter()
             streams = await asyncio.gather(*(stream(s) for s in range(S)))
             wall = time.perf_counter() - t0
-            return server, sessions, streams, wall
+            return server.stats(), sessions, streams, wall
 
-    server, sessions, streams, wall = asyncio.run(serve())
+    stats, sessions, streams, wall = asyncio.run(serve())
 
     iters = np.array([[r.iterations for r, _ in st] for st in streams])  # (S, T)
     err = max(e for st in streams for _, e in st)
@@ -134,8 +140,8 @@ def _run_drifting(args, prob, system, server_kwargs, rng) -> None:
         f"-> session total {total} vs ~{cold * T} if every update were cold"
     )
     print(
-        f"batches: {server.stats.batches} "
-        f"(mean size {server.stats.mean_batch_size:.2f}); "
+        f"batches: {stats['batches']} "
+        f"(mean size {stats['mean_batch_size']:.2f}); "
         f"accuracy: max|x - x_true| = {err:.2e}"
     )
 
@@ -157,7 +163,7 @@ def main(argv=None) -> None:
 
         force_host_device_count(args.mesh)
 
-    from repro.serving.queue import ServerStats, SolveServer, replay_trace
+    from repro.serving.queue import SolveServer, replay_trace
     from repro.sparse import make_problem
 
     mesh = None
@@ -175,6 +181,7 @@ def main(argv=None) -> None:
         num_epochs=args.epochs,
         tol=args.tol,
         pool_size=args.pool_size,
+        checkpoint=args.checkpoint_dir,
         prepare_kwargs=dict(
             method=args.method, num_blocks=args.num_blocks,
             materialize_p=False, mode=args.mode,
@@ -199,13 +206,13 @@ def main(argv=None) -> None:
             fp = server.register(system)
             # warm the compiled programs so the trace measures steady state
             await server.submit(fp, rhs[:, 0])
-            server.stats = ServerStats()  # report the trace, not the warm-up
+            server.reset_stats()  # report the trace, not the warm-up
             t0 = time.perf_counter()
             results = await replay_trace(server, fp, rhs, gaps)
             wall = time.perf_counter() - t0
-            return server, results, wall, server.pool.resident()
+            return server.stats(), results, wall, server.pool.resident()
 
-    server, results, wall, resident = asyncio.run(serve())
+    stats, results, wall, resident = asyncio.run(serve())
 
     lat_ms = np.array([r.queue_ms + r.solve_ms for r in results])
     err = max(
@@ -229,11 +236,17 @@ def main(argv=None) -> None:
         f"p99={np.percentile(lat_ms, 99):.1f} max={lat_ms.max():.1f}"
     )
     print(
-        f"batches: {server.stats.batches} "
-        f"(mean size {server.stats.mean_batch_size:.2f}, "
-        f"full {server.stats.full_batches}, "
-        f"timeout-flushed {server.stats.timeout_flushes}); "
+        f"batches: {stats['batches']} "
+        f"(mean size {stats['mean_batch_size']:.2f}, "
+        f"full {stats['full_batches']}, "
+        f"timeout-flushed {stats['timeout_flushes']}); "
         f"per-request sizes {dict(sorted(sizes.items()))}"
+    )
+    print(
+        f"pool: hits={stats['hits']} misses={stats['misses']} "
+        f"(prepares={stats['prepares']} restores={stats['restores']}, "
+        f"restore {stats['restore_ms']:.1f}ms total) "
+        f"evictions={stats['evictions']}"
     )
     print(
         f"accuracy: max|x - x_true| = {err:.2e}; "

@@ -1,0 +1,146 @@
+"""Persistent factor checkpoints: warm-restore prepared solvers from disk.
+
+``prepare`` is the expensive half of the prepare/solve split — per-block QR
+(dense path) or the partitioned ELL build + Gram pseudo-inverses (matfree) —
+and the serving pool throws that work away on every LRU eviction and process
+restart. This store persists the prepared state keyed by
+``matrix_fingerprint`` so a miss restores in file-IO time instead of
+re-factorizing (the restore-only checkpointing idiom: serving never *needs*
+a save to make progress, so every load failure silently degrades to a fresh
+``prepare``).
+
+One ``<fingerprint>.npz`` per system: the solver's ``to_state()`` arrays
+plus one ``__meta__`` JSON string (stored as a 0-d unicode array — loadable
+with ``allow_pickle=False``, so a corrupt or hostile file can at worst fail
+to parse). Writes go through a temp file + ``os.replace`` so readers never
+observe a half-written checkpoint, and a crashed writer leaves the previous
+checkpoint intact.
+
+Load validates before trusting: format version, solver path, and a
+``prepare_key`` digest of the prepare kwargs that built the saved state — a
+checkpoint written under different prepare settings (other method, block
+count, dtype, ...) MUST miss, because the pool would otherwise serve factors
+that disagree with its registration. Mesh-backed (sharded) solvers are not
+checkpointed: device placement does not serialize, and re-placing restored
+host arrays is exactly what ``prepare`` already does.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import numpy as np
+
+FORMAT_VERSION = 1
+
+# prepare kwargs that do not change the PREPARED STATE's values, only its
+# placement/runtime — excluded from the compatibility digest
+_PLACEMENT_KWARGS = ("mesh", "block_axes")
+
+
+def prepare_key(prepare_kwargs: dict) -> str:
+    """Canonical digest of the prepare settings a checkpoint was built
+    under; equality is the load-time compatibility test."""
+    items = sorted(
+        (k, repr(v)) for k, v in prepare_kwargs.items()
+        if k not in _PLACEMENT_KWARGS
+    )
+    return repr(items)
+
+
+def _solver_class(path: str):
+    if path == "dense":
+        from repro.core.prepared import PreparedSolver
+
+        return PreparedSolver
+    if path == "matfree":
+        from repro.core.matfree import MatrixFreePreparedSolver
+
+        return MatrixFreePreparedSolver
+    return None
+
+
+class CheckpointStore:
+    """Directory of ``<fingerprint>.npz`` factor checkpoints.
+
+    ``save`` is best-effort (returns False for unsupported solvers);
+    ``load`` is restore-only robust (returns None on ANY mismatch or
+    corruption — the caller falls back to ``prepare``). Counters
+    (``saves``/``loads``/``load_misses``) are observability only; the
+    pool's ``PoolStats`` tracks the serving-level restore metrics.
+    """
+
+    def __init__(self, directory: str | os.PathLike):
+        self.directory = pathlib.Path(directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self.saves = 0
+        self.loads = 0
+        self.load_misses = 0
+
+    def path(self, fingerprint: str) -> pathlib.Path:
+        return self.directory / f"{fingerprint}.npz"
+
+    def __contains__(self, fingerprint: str) -> bool:
+        return self.path(fingerprint).exists()
+
+    def save(self, fingerprint: str, prep, prepare_kwargs: dict) -> bool:
+        """Persist a prepared solver; returns whether it was checkpointed.
+
+        Skips solvers without serialization hooks and mesh-backed state
+        (``matfree_sharded`` — see module docstring); those systems simply
+        keep re-preparing, they never error.
+        """
+        to_state = getattr(prep, "to_state", None)
+        if to_state is None or prepare_kwargs.get("mesh") is not None:
+            return False
+        arrays, meta = to_state()
+        meta = {
+            "format": FORMAT_VERSION,
+            "prepare_key": prepare_key(prepare_kwargs),
+            **meta,
+        }
+        target = self.path(fingerprint)
+        tmp = target.with_name(target.name + ".tmp")
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, __meta__=np.array(json.dumps(meta)), **arrays)
+            os.replace(tmp, target)  # atomic: readers see old or new, whole
+        except OSError:
+            tmp.unlink(missing_ok=True)
+            return False
+        self.saves += 1
+        return True
+
+    def load(self, fingerprint: str, prepare_kwargs: dict):
+        """Restore the prepared solver for ``fingerprint``, or None.
+
+        None on: no checkpoint, placement kwargs demanding a mesh, format
+        or ``prepare_key`` mismatch, or a corrupt/unreadable file — every
+        path the pool can recover from by preparing fresh.
+        """
+        if prepare_kwargs.get("mesh") is not None:
+            return None
+        target = self.path(fingerprint)
+        try:
+            with np.load(target, allow_pickle=False) as z:
+                meta = json.loads(str(z["__meta__"][()]))
+                if meta.get("format") != FORMAT_VERSION:
+                    self.load_misses += 1
+                    return None
+                if meta.get("prepare_key") != prepare_key(prepare_kwargs):
+                    self.load_misses += 1
+                    return None
+                cls = _solver_class(meta.get("path"))
+                if cls is None:
+                    self.load_misses += 1
+                    return None
+                arrays = {k: z[k] for k in z.files if k != "__meta__"}
+            prep = cls.from_state(arrays, meta)
+        except FileNotFoundError:
+            return None
+        except Exception:  # corrupt/truncated/foreign file: restore-only
+            self.load_misses += 1
+            return None
+        self.loads += 1
+        return prep

@@ -7,15 +7,23 @@ projector runs as (p,n)×(n,k) MXU matmuls — benchmarks/multirhs.py). Real
 request streams do not arrive in clean batches, so this module supplies the
 serving loop that manufactures them:
 
-  * ``SolveServer.submit(fp, b)`` — accept one single-RHS request and await
-    its result;
+  * ``SolveServer.submit(fp, b, options)`` — accept one single-RHS request
+    (typed ``SubmitOptions``: priority class, deadline, per-request
+    tolerance, warm start; the bare ``submit(fp, b)`` form is the
+    default-options shim) and await its result;
   * a per-system dispatcher coalesces pending requests into a column batch
-    under a ``max_batch`` / ``max_wait_ms`` policy (flush on whichever
-    trips first — the standard continuous-batching compromise between
-    throughput and tail latency);
+    under a ``BatchPolicy`` (``repro.serving.policy``): bulk traffic keeps
+    the throughput-oriented ``max_batch`` / ``max_wait_ms`` window, while
+    INTERACTIVE requests flush in a small early batch ahead of any pending
+    bulk work, deadlines pull a flush forward by the running solve-time
+    estimate, and ``max_pending_bulk`` admission control keeps a bulk
+    flood from starving the latency class;
   * the batch dispatches through a ``PreparedPool`` — an LRU-bounded cache
     of ``PreparedSolver``s keyed by matrix fingerprint, so factors for hot
-    systems stay resident and cold ones are re-prepared on demand;
+    systems stay resident and cold ones are re-prepared on demand — and a
+    pool miss consults the optional ``CheckpointStore`` first
+    (``repro.serving.checkpoint``), restoring persisted factors in file-IO
+    time instead of re-factorizing;
   * per-column results (solution, final residual, epochs-to-tolerance via
     ``SolveResult.per_column``) scatter back to the per-request futures in
     arrival order.
@@ -30,7 +38,8 @@ import asyncio
 import dataclasses
 import hashlib
 import threading
-from collections import OrderedDict
+import time
+from collections import OrderedDict, deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any
 
@@ -39,6 +48,14 @@ import numpy as np
 from repro.core import prepare
 from repro.core.prepared import ColumnResult, PreparedSolver
 from repro.core.session import SESSION_METHODS, DriftPredictor
+from repro.serving.checkpoint import CheckpointStore
+from repro.serving.policy import (
+    AdmissionError,  # noqa: F401  (re-exported: raised by submit)
+    BatchPolicy,
+    Priority,
+    SubmitOptions,
+    batch_key,
+)
 from repro.sparse.matrix import COOMatrix
 
 
@@ -64,9 +81,11 @@ def matrix_fingerprint(A: np.ndarray | COOMatrix) -> str:
 
 @dataclasses.dataclass
 class PoolStats:
-    prepares: int = 0  # cache misses that ran prepare()
+    prepares: int = 0  # cache misses that ran prepare() (cold misses)
     hits: int = 0
     evictions: int = 0
+    restores: int = 0  # cache misses served from the checkpoint store
+    restore_ms: float = 0.0  # cumulative restore wall time
 
 
 class PreparedPool:
@@ -90,14 +109,29 @@ class PreparedPool:
     holds its own reference to the ``PreparedSolver``, so a batch that is
     mid-iteration when its entry is evicted finishes unharmed.
 
+    ``checkpoint`` (a ``CheckpointStore`` or a directory path) persists
+    prepared factors to disk: a miss consults the store before
+    re-factorizing (``stats.restores``/``restore_ms`` count the warm
+    restores), and each fresh ``prepare`` is written through, so LRU
+    eviction and process restart both come back in file-IO time. Sharded
+    (mesh-backed) registrations skip the store and always re-prepare.
+
     Thread-safe: ``get`` may run on the server's solver thread while
     ``register`` runs on the event-loop thread.
     """
 
-    def __init__(self, max_size: int = 4, **prepare_kwargs):
+    def __init__(
+        self,
+        max_size: int = 4,
+        checkpoint: CheckpointStore | str | None = None,
+        **prepare_kwargs,
+    ):
         if max_size < 1:
             raise ValueError(f"max_size must be >= 1, got {max_size}")
         self.max_size = max_size
+        if checkpoint is not None and not isinstance(checkpoint, CheckpointStore):
+            checkpoint = CheckpointStore(checkpoint)
+        self.checkpoint = checkpoint
         self.prepare_kwargs = dict(prepare_kwargs)
         self._systems: dict[str, tuple[np.ndarray, dict]] = {}
         self._lru: OrderedDict[str, PreparedSolver] = OrderedDict()
@@ -130,7 +164,8 @@ class PreparedPool:
         return self._systems[fingerprint][0].shape[0]
 
     def get(self, fingerprint: str) -> PreparedSolver:
-        """The PreparedSolver for ``fingerprint`` — LRU hit or re-prepare."""
+        """The PreparedSolver for ``fingerprint`` — LRU hit, checkpoint
+        restore, or re-prepare (in that order of preference/cost)."""
         with self._lock:
             prep = self._lru.get(fingerprint)
             if prep is not None:
@@ -142,10 +177,24 @@ class PreparedPool:
                     f"unknown system {fingerprint!r}; call register(A) first"
                 )
             A, kwargs = self._systems[fingerprint]
-        # factorize outside the lock (the expensive part)
-        prep = prepare(A, **kwargs)
+        # restore/factorize outside the lock (the expensive part)
+        restore_ms = None
+        prep = None
+        if self.checkpoint is not None:
+            t0 = time.perf_counter()
+            prep = self.checkpoint.load(fingerprint, kwargs)
+            if prep is not None:
+                restore_ms = (time.perf_counter() - t0) * 1e3
+        if prep is None:
+            prep = prepare(A, **kwargs)
+            if self.checkpoint is not None:  # write-through for next miss
+                self.checkpoint.save(fingerprint, prep, kwargs)
         with self._lock:
-            self.stats.prepares += 1
+            if restore_ms is None:
+                self.stats.prepares += 1
+            else:
+                self.stats.restores += 1
+                self.stats.restore_ms += restore_ms
             self._lru[fingerprint] = prep
             self._lru.move_to_end(fingerprint)
             while len(self._lru) > self.max_size:
@@ -198,8 +247,13 @@ class RequestResult(ColumnResult):
 class ServerStats:
     requests: int = 0
     batches: int = 0
-    full_batches: int = 0  # flushed because max_batch was reached
-    timeout_flushes: int = 0  # flushed because max_wait_ms elapsed
+    full_batches: int = 0  # flushed because the class's batch cap was reached
+    timeout_flushes: int = 0  # flushed because the class's wait window closed
+    deadline_flushes: int = 0  # pulled forward by a request deadline
+    drain_flushes: int = 0  # flushed by server shutdown
+    interactive_batches: int = 0
+    bulk_batches: int = 0
+    admission_rejects: int = 0  # bulk submits refused by max_pending_bulk
 
     @property
     def mean_batch_size(self) -> float:
@@ -207,16 +261,59 @@ class ServerStats:
 
 
 class _Pending:
-    __slots__ = ("b", "future", "t_enqueue", "x0")
+    __slots__ = (
+        "b", "future", "t_enqueue", "options", "deadline_at", "batch_key",
+    )
 
-    def __init__(self, b, future, t_enqueue, x0=None):
+    def __init__(self, b, future, t_enqueue, options, deadline_at):
         self.b = b
         self.future = future
         self.t_enqueue = t_enqueue
-        self.x0 = x0  # (n,) session warm start, or None (cold request)
+        self.options = options  # SubmitOptions (x0 = session warm start)
+        self.deadline_at = deadline_at  # absolute loop time, or None
+        self.batch_key = batch_key(options)
 
 
-_SHUTDOWN = object()
+class _PendingQueue:
+    """One system's pending requests: per-priority FIFO deques plus the
+    dispatcher's wake-up event. Single-threaded (event-loop only)."""
+
+    def __init__(self):
+        self.pending = {priority: deque() for priority in Priority}
+        self.event = asyncio.Event()
+        self.closed = False
+
+    def push(self, item: _Pending) -> None:
+        self.pending[item.options.priority].append(item)
+        self.event.set()
+
+    def close(self) -> None:
+        self.closed = True
+        self.event.set()
+
+    def empty(self) -> bool:
+        return not any(self.pending.values())
+
+    def backlog(self, priority: Priority) -> int:
+        return len(self.pending[priority])
+
+    def take(self, priority: Priority, limit: int) -> list[_Pending]:
+        """Pop up to ``limit`` oldest requests of the class that share the
+        head request's batch key; incompatible requests (a different
+        per-request ``tol``) keep their order and go out in a later
+        batch."""
+        dq = self.pending[priority]
+        key = dq[0].batch_key
+        taken: list[_Pending] = []
+        kept: list[_Pending] = []
+        for item in dq:
+            if len(taken) < limit and item.batch_key == key:
+                taken.append(item)
+            else:
+                kept.append(item)
+        dq.clear()
+        dq.extend(kept)
+        return taken
 
 
 class SolveServer:
@@ -232,6 +329,13 @@ class SolveServer:
         async with SolveServer(max_batch=8, max_wait_ms=2.0) as srv:
             fp = srv.register(A)
             results = await asyncio.gather(*(srv.submit(fp, b) for b in bs))
+
+    Scheduling is delegated to a ``BatchPolicy`` (``policy=``; the legacy
+    ``max_batch``/``max_wait_ms`` arguments build the default bulk-only
+    policy, so existing call sites behave unchanged). ``submit`` takes an
+    optional ``SubmitOptions`` for priority / deadline / per-request
+    tolerance / warm start; ``checkpoint=`` threads a factor
+    ``CheckpointStore`` (or directory path) into the internally-built pool.
     """
 
     def __init__(
@@ -245,6 +349,8 @@ class SolveServer:
         prepare_kwargs: dict | None = None,
         solve_kwargs: dict | None = None,
         bucket_pad: bool = True,
+        policy: BatchPolicy | None = None,
+        checkpoint: CheckpointStore | str | None = None,
     ):
         """``bucket_pad=True`` pads a partial batch with zero columns up to
         ``max_batch`` so every dispatch reuses ONE compiled (m, max_batch)
@@ -253,18 +359,22 @@ class SolveServer:
         (shape bucketing, the standard serving fix). The consensus iteration
         is column-separable, so padding cannot perturb real columns; padded
         columns are dropped before scatter."""
-        if max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        self.pool = pool or PreparedPool(pool_size, **(prepare_kwargs or {}))
-        self.max_batch = int(max_batch)
-        self.max_wait_ms = float(max_wait_ms)
+        self.policy = policy or BatchPolicy(
+            max_batch=int(max_batch), max_wait_ms=float(max_wait_ms)
+        )
+        self.max_batch = self.policy.max_batch
+        self.max_wait_ms = self.policy.max_wait_ms
+        self.pool = pool or PreparedPool(
+            pool_size, checkpoint=checkpoint, **(prepare_kwargs or {})
+        )
         self.num_epochs = int(num_epochs)
         self.tol = tol
         self.bucket_pad = bool(bucket_pad)
         self.solve_kwargs = dict(solve_kwargs or {})
-        self.stats = ServerStats()
-        self._queues: dict[str, asyncio.Queue] = {}
+        self._stats = ServerStats()
+        self._queues: dict[str, _PendingQueue] = {}
         self._dispatchers: dict[str, asyncio.Task] = {}
+        self._solve_s: dict[str, float] = {}  # EWMA batch solve time
         self._executor = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="solve"
         )
@@ -282,10 +392,29 @@ class SolveServer:
         """Drain dispatchers (pending requests still complete) and shut down."""
         self._closed = True
         for q in self._queues.values():
-            q.put_nowait(_SHUTDOWN)
+            q.close()
         for task in self._dispatchers.values():
             await task
         self._executor.shutdown(wait=True)
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """The unified serving-stats view: dispatcher counters (requests,
+        batches, flush reasons, per-class batches, admission rejects) merged
+        flat with the pool's cache counters — hits / misses (prepares +
+        restores) / evictions — and the checkpoint restore metrics
+        (``restores``, ``restore_ms``)."""
+        out = dataclasses.asdict(self._stats)
+        out["mean_batch_size"] = self._stats.mean_batch_size
+        out.update(dataclasses.asdict(self.pool.stats))
+        out["misses"] = self.pool.stats.prepares + self.pool.stats.restores
+        return out
+
+    def reset_stats(self) -> None:
+        """Zero the dispatcher counters (e.g. after warm-up, so a measured
+        trace reports itself). Pool/checkpoint counters are cumulative."""
+        self._stats = ServerStats()
 
     # -- request path -------------------------------------------------------
 
@@ -293,9 +422,22 @@ class SolveServer:
         """Register a system matrix; returns the fingerprint to submit with."""
         return self.pool.register(A, **prepare_kwargs)
 
-    async def submit(self, fingerprint: str, b: np.ndarray) -> RequestResult:
-        """Submit one right-hand side; resolves when its batch completes."""
-        return await self._enqueue(fingerprint, b)
+    async def submit(
+        self,
+        fingerprint: str,
+        b: np.ndarray,
+        options: SubmitOptions | None = None,
+    ) -> RequestResult:
+        """Submit one right-hand side; resolves when its batch completes.
+
+        ``options`` is the typed request surface (``SubmitOptions``):
+        priority class, deadline, per-request tolerance, warm start. The
+        bare two-argument form is the default-options shim — bulk priority,
+        no deadline, i.e. exactly the historical FIFO behavior. Raises
+        ``AdmissionError`` synchronously when admission control refuses a
+        bulk request (``BatchPolicy.max_pending_bulk``).
+        """
+        return await self._enqueue(fingerprint, b, options)
 
     def open_session(
         self, fingerprint: str, predict: str = "auto"
@@ -312,59 +454,90 @@ class SolveServer:
         return ServerSession(self, fingerprint, predict=predict)
 
     async def _enqueue(
-        self, fingerprint: str, b: np.ndarray, x0: np.ndarray | None = None
+        self,
+        fingerprint: str,
+        b: np.ndarray,
+        options: SubmitOptions | None = None,
     ) -> RequestResult:
         if self._closed:
             raise RuntimeError("server is closed")
+        options = options or SubmitOptions()
         b = np.asarray(b)
         m = self.pool.num_rows(fingerprint)  # KeyError for unknown systems
         if b.shape != (m,):
             raise ValueError(f"rhs shape {b.shape} != ({m},) for this system")
         loop = asyncio.get_running_loop()
-        future: asyncio.Future = loop.create_future()
         queue = self._queues.get(fingerprint)
         if queue is None:
-            queue = self._queues[fingerprint] = asyncio.Queue()
+            queue = self._queues[fingerprint] = _PendingQueue()
             self._dispatchers[fingerprint] = asyncio.create_task(
                 self._dispatch_loop(fingerprint, queue)
             )
-        queue.put_nowait(_Pending(b, future, loop.time(), x0=x0))
+        try:  # admission control: fail fast BEFORE the request queues
+            self.policy.admit(options.priority, queue.backlog(Priority.BULK))
+        except AdmissionError:
+            self._stats.admission_rejects += 1
+            raise
+        future: asyncio.Future = loop.create_future()
+        now = loop.time()
+        deadline_at = (
+            None if options.deadline_ms is None
+            else now + options.deadline_ms / 1e3
+        )
+        queue.push(_Pending(b, future, now, options, deadline_at))
         return await future
 
     # -- batching loop ------------------------------------------------------
 
-    async def _dispatch_loop(self, fingerprint: str, queue: asyncio.Queue):
+    async def _dispatch_loop(self, fingerprint: str, queue: _PendingQueue):
+        """One system's scheduler: wait for work, ask the ``BatchPolicy``
+        which class to flush (or when to wake), dispatch, repeat. Strictly
+        interactive-first by construction of ``BatchPolicy.decide``; on
+        close the queue drains — pending requests still complete."""
         loop = asyncio.get_running_loop()
         while True:
-            first = await queue.get()
-            if first is _SHUTDOWN:
-                return
-            batch = [first]
-            deadline = loop.time() + self.max_wait_ms / 1e3
-            shutdown = False
-            while len(batch) < self.max_batch:
-                remaining = deadline - loop.time()
-                if remaining <= 0:
-                    break
+            if queue.empty():
+                if queue.closed:
+                    return
+                await queue.event.wait()
+                queue.event.clear()
+                continue
+            priority, reason, wake = self.policy.decide(
+                loop.time(), queue.pending,
+                solve_s=self._solve_s.get(fingerprint, 0.0),
+                draining=queue.closed,
+            )
+            if priority is None:  # sleep until the decision can change
                 try:
-                    item = await asyncio.wait_for(queue.get(), remaining)
+                    await asyncio.wait_for(
+                        queue.event.wait(), max(0.0, wake - loop.time())
+                    )
+                    queue.event.clear()
                 except asyncio.TimeoutError:
-                    break
-                if item is _SHUTDOWN:
-                    shutdown = True
-                    break
-                batch.append(item)
-            if len(batch) >= self.max_batch:
-                self.stats.full_batches += 1
+                    pass
+                continue
+            batch = queue.take(priority, self.policy.cap(priority))
+            counters = {
+                "full": "full_batches", "timeout": "timeout_flushes",
+                "deadline": "deadline_flushes", "drain": "drain_flushes",
+            }
+            setattr(
+                self._stats, counters[reason],
+                getattr(self._stats, counters[reason]) + 1,
+            )
+            if priority is Priority.INTERACTIVE:
+                self._stats.interactive_batches += 1
             else:
-                self.stats.timeout_flushes += 1
+                self._stats.bulk_batches += 1
             await self._solve_batch(fingerprint, batch)
-            if shutdown:
-                return
 
     async def _solve_batch(self, fingerprint: str, batch: list[_Pending]):
         loop = asyncio.get_running_loop()
         t_dispatch = loop.time()
+        # the batch shares one batch key (``_PendingQueue.take`` groups on
+        # it), so per-request solve options are batch-uniform here
+        tol = batch[0].options.tol
+        tol = self.tol if tol is None else tol
         B = np.stack([p.b for p in batch], axis=1)  # (m, k), arrival order
         if self.bucket_pad and B.shape[1] < self.max_batch:
             pad = np.zeros((B.shape[0], self.max_batch - B.shape[1]), B.dtype)
@@ -373,14 +546,16 @@ class SolveServer:
         # lets them batch alongside cold one-shot columns in ONE compiled
         # program (masked-off columns reduce exactly to the plain init)
         x0_arg = None
-        if any(p.x0 is not None for p in batch):
-            n = next(p.x0 for p in batch if p.x0 is not None).shape[0]
+        if any(p.options.x0 is not None for p in batch):
+            n = next(
+                p.options.x0 for p in batch if p.options.x0 is not None
+            ).shape[0]
             k = B.shape[1]  # after bucket padding; padded columns stay cold
             warm = np.zeros((n, k), B.dtype)
             mask = np.zeros((k,), bool)
             for i, p in enumerate(batch):
-                if p.x0 is not None:
-                    warm[:, i] = p.x0
+                if p.options.x0 is not None:
+                    warm[:, i] = p.options.x0
                     mask[i] = True
             x0_arg = (warm, mask)
 
@@ -390,11 +565,11 @@ class SolveServer:
             # the pool evicts this entry mid-solve
             prep = self.pool.get(fingerprint)
             kwargs = dict(self.solve_kwargs)
-            if self.tol is not None and prep.method in SESSION_METHODS:
+            if tol is not None and prep.method in SESSION_METHODS:
                 # arm the masked in-scan early exit at the reporting
                 # tolerance: converged (and zero-padded bucket) columns
                 # freeze instead of burning projector work to the epoch cap
-                kwargs.setdefault("tol", self.tol)
+                kwargs.setdefault("tol", tol)
             if x0_arg is not None and prep.method in SESSION_METHODS:
                 # the projection warm start is consensus-only; on other
                 # methods the prediction is silently dropped (cold solve)
@@ -404,15 +579,20 @@ class SolveServer:
         try:
             result = await loop.run_in_executor(self._executor, run)
             solve_ms = (loop.time() - t_dispatch) * 1e3
-            columns = result.per_column(tol=self.tol)
+            columns = result.per_column(tol=tol)
         except Exception as exc:  # scatter the failure to every batchmate —
             # the dispatcher task must survive, or pending submits hang
             for pending in batch:
                 if not pending.future.done():
                     pending.future.set_exception(exc)
             return
-        self.stats.requests += len(batch)
-        self.stats.batches += 1
+        # EWMA batch solve time — what the policy's deadline pull-forward
+        # assumes the NEXT batch will cost
+        prev = self._solve_s.get(fingerprint)
+        dt = solve_ms / 1e3
+        self._solve_s[fingerprint] = dt if prev is None else 0.7 * prev + 0.3 * dt
+        self._stats.requests += len(batch)
+        self._stats.batches += 1
         for pending, col in zip(batch, columns):
             if pending.future.done():  # caller went away (cancelled)
                 continue
@@ -470,12 +650,22 @@ class ServerSession:
         """Forget the stream history; the next update solves cold."""
         self._predictor.reset()
 
-    async def update(self, b: np.ndarray) -> RequestResult:
+    async def update(
+        self, b: np.ndarray, options: SubmitOptions | None = None
+    ) -> RequestResult:
         """Predict from the stream history, enqueue the corrected solve,
-        observe the result. Resolves when the carrying batch completes."""
+        observe the result. Resolves when the carrying batch completes.
+
+        ``options`` carries the same typed surface as ``submit`` (priority,
+        deadline, tolerance); the stream's prediction rides its ``x0`` slot
+        unless the caller pinned an explicit warm start there."""
         b = np.asarray(b)
-        x0 = self._predictor.predict(b)
-        res = await self.server._enqueue(self.fingerprint, b, x0=x0)
+        options = options or SubmitOptions()
+        if options.x0 is None:
+            x0 = self._predictor.predict(b)
+            if x0 is not None:
+                options = dataclasses.replace(options, x0=x0)
+        res = await self.server._enqueue(self.fingerprint, b, options)
         self._predictor.observe(b, res.x)
         self._updates += 1
         self._total_iterations += int(res.iterations)

@@ -771,6 +771,41 @@ class PartitionedBSR:
         ).sum(axis=-1)  # (J, Rp) occupied tiles per block-row
         return int(self.fwd_indices.shape[-1]), float(occupied.mean())
 
+    # -- checkpoint serialization (repro.serving.checkpoint) -----------------
+
+    def to_arrays(self, prefix: str = "op_") -> tuple[dict, dict]:
+        """Flatten to plain numpy arrays + JSON-able metadata.
+
+        The split is DERIVED from the dataclass fields: every array child
+        (present ones only — absent transpose/gram/balance parts are simply
+        omitted) lands in ``arrays`` under ``prefix + field_name``, and the
+        static shape metadata lands in ``meta``. ``from_arrays`` inverts it
+        bit-for-bit — the restored operator's products are identical.
+        """
+        arrays: dict = {}
+        meta: dict = {}
+        for f in dataclasses.fields(self):
+            value = getattr(self, f.name)
+            if f.name in ("shape", "p", "p_pad"):
+                meta[f.name] = list(value) if f.name == "shape" else int(value)
+            elif value is not None:
+                arrays[prefix + f.name] = np.asarray(value)
+        return arrays, meta
+
+    @classmethod
+    def from_arrays(cls, arrays, meta: dict, prefix: str = "op_"):
+        """Rebuild from ``to_arrays`` output (extra keys in ``arrays`` are
+        ignored, so the caller can pool several objects in one archive)."""
+        kwargs = {
+            f.name: jnp.asarray(arrays[prefix + f.name])
+            for f in dataclasses.fields(cls)
+            if prefix + f.name in arrays
+        }
+        return cls(
+            shape=tuple(meta["shape"]), p=int(meta["p"]),
+            p_pad=int(meta["p_pad"]), **kwargs,
+        )
+
     def block_rhs(self, b: np.ndarray) -> jnp.ndarray:
         """RHS (m,) or (m, k) -> (J, p_pad, k), zero-padded like the rows."""
         b = np.asarray(b)

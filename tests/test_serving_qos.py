@@ -1,0 +1,413 @@
+"""Serving QoS + factor checkpoint tests (ISSUE 7 tentpole).
+
+Four seams where the QoS redesign can rot:
+  (a) ``BatchPolicy.decide`` is the pure scheduling brain — its priority
+      order, flush reasons, and wake times are contract, not heuristics;
+  (b) the checkpoint store must restore factors BIT-identically (a solver
+      that is "close" poisons reproducibility) and miss safely on any
+      mismatch or corruption;
+  (c) the server must keep its QoS promises end-to-end: interactive
+      requests overtake a bulk flood, admission control rejects
+      deterministically, per-request tolerances never share a batch;
+  (d) the typed option surfaces (``SubmitOptions``/``SolveOptions``) must
+      stay equivalent to the historical kwarg forms they declare.
+"""
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import prepare
+from repro.core.prepared import SolveOptions
+from repro.serving.checkpoint import CheckpointStore, prepare_key
+from repro.serving.policy import (
+    _BATCH_KEY_FIELDS,
+    AdmissionError,
+    BatchPolicy,
+    Priority,
+    SubmitOptions,
+    batch_key,
+)
+from repro.serving.queue import SolveServer, matrix_fingerprint
+from repro.sparse import generate_schenk_like, make_problem
+
+PREP_KW = dict(num_blocks=8, materialize_p=False)
+
+
+def _run(coro):
+    return asyncio.run(asyncio.wait_for(coro, timeout=120))
+
+
+# -- (a) BatchPolicy.decide: the pure scheduling decision ---------------------
+
+
+class _Item:
+    def __init__(self, t_enqueue, deadline_at=None):
+        self.t_enqueue = t_enqueue
+        self.deadline_at = deadline_at
+
+
+def _pending(bulk=(), interactive=()):
+    return {Priority.INTERACTIVE: list(interactive), Priority.BULK: list(bulk)}
+
+
+def test_decide_idle_and_waiting():
+    policy = BatchPolicy(max_batch=4, max_wait_ms=10.0)
+    assert policy.decide(0.0, _pending()) == (None, None, None)
+    # one bulk request, window still open: sleep until the window closes
+    priority, reason, wake = policy.decide(1.0, _pending(bulk=[_Item(1.0)]))
+    assert priority is None and reason is None
+    assert wake == pytest.approx(1.0 + 0.010)
+
+
+def test_decide_flush_reasons():
+    policy = BatchPolicy(max_batch=2, max_wait_ms=10.0)
+    full = _pending(bulk=[_Item(0.0), _Item(0.0)])
+    assert policy.decide(0.0, full)[:2] == (Priority.BULK, "full")
+    late = _pending(bulk=[_Item(0.0)])
+    assert policy.decide(0.5, late)[:2] == (Priority.BULK, "timeout")
+    assert policy.decide(0.0, late, draining=True)[:2] == (
+        Priority.BULK, "drain",
+    )
+
+
+def test_decide_deadline_pulls_flush_forward_by_solve_estimate():
+    # window closes at t=0.1; deadline at t=0.05 with a 0.03s solve estimate
+    # must flush at 0.02 — a deadline is LATENCY budget, the dispatch has to
+    # leave room for the solve itself
+    policy = BatchPolicy(max_batch=8, max_wait_ms=100.0)
+    queue = _pending(bulk=[_Item(0.0, deadline_at=0.05)])
+    priority, reason, wake = policy.decide(0.0, queue, solve_s=0.03)
+    assert priority is None and wake == pytest.approx(0.02)
+    assert policy.decide(0.021, queue, solve_s=0.03)[:2] == (
+        Priority.BULK, "deadline",
+    )
+
+
+def test_decide_strictly_interactive_first():
+    # a FULL bulk batch must still lose to a single interactive arrival
+    policy = BatchPolicy(max_batch=2, max_wait_ms=10.0)
+    queue = _pending(
+        bulk=[_Item(0.0), _Item(0.0)], interactive=[_Item(5.0)]
+    )
+    priority, reason, _ = policy.decide(5.0, queue)
+    assert priority is Priority.INTERACTIVE
+    assert reason == "timeout"  # interactive_max_wait_ms=0: flush on wake
+
+
+def test_policy_caps_waits_and_validation():
+    policy = BatchPolicy(
+        max_batch=8, max_wait_ms=4.0,
+        interactive_max_batch=2, interactive_max_wait_ms=1.0,
+    )
+    assert policy.cap(Priority.BULK) == 8
+    assert policy.cap(Priority.INTERACTIVE) == 2
+    assert policy.wait_s(Priority.BULK) == pytest.approx(0.004)
+    assert policy.wait_s(Priority.INTERACTIVE) == pytest.approx(0.001)
+    # interactive cap defaults to the bulk cap
+    assert BatchPolicy(max_batch=5).cap(Priority.INTERACTIVE) == 5
+    with pytest.raises(ValueError, match="max_batch"):
+        BatchPolicy(max_batch=0)
+    with pytest.raises(ValueError, match="interactive_max_batch"):
+        BatchPolicy(interactive_max_batch=0)
+
+
+def test_admission_control_is_bulk_only():
+    policy = BatchPolicy(max_pending_bulk=3)
+    policy.admit(Priority.BULK, bulk_backlog=2)  # under the bound: fine
+    with pytest.raises(AdmissionError):
+        policy.admit(Priority.BULK, bulk_backlog=3)
+    # interactive traffic is never admission-limited by the bulk backlog
+    policy.admit(Priority.INTERACTIVE, bulk_backlog=100)
+    BatchPolicy().admit(Priority.BULK, bulk_backlog=10**6)  # default: off
+
+
+def test_batch_key_derivation():
+    """The batch-compatibility key is DERIVED: SubmitOptions ∩ SolveOptions
+    minus per-column fields. Today that is exactly ("tol",) — scheduling
+    knobs (priority, deadline) and the per-column warm start must not split
+    batches."""
+    assert _BATCH_KEY_FIELDS == ("tol",)
+    assert set(_BATCH_KEY_FIELDS) <= set(SubmitOptions.field_names())
+    assert set(_BATCH_KEY_FIELDS) <= set(SolveOptions.field_names())
+    a = SubmitOptions(priority=Priority.INTERACTIVE, deadline_ms=5.0)
+    b = SubmitOptions(x0=np.ones(3))
+    assert batch_key(a) == batch_key(b) == batch_key(SubmitOptions())
+    assert batch_key(SubmitOptions(tol=1e-5)) != batch_key(SubmitOptions())
+
+
+# -- (b) checkpoint store: bit-identical restores, safe misses ----------------
+
+
+@pytest.fixture(scope="module")
+def dense_prob():
+    return make_problem(n=64, m=256, seed=31, dtype=np.float32)
+
+
+def _roundtrip(tmp_path, A, kwargs, b, num_epochs=20):
+    """Save → load → assert the restored solver solves bit-identically."""
+    store = CheckpointStore(tmp_path)
+    prep = prepare(A, **kwargs)
+    fp = matrix_fingerprint(A)
+    assert store.save(fp, prep, kwargs)
+    assert fp in store
+    restored = store.load(fp, kwargs)
+    assert restored is not None
+    assert type(restored) is type(prep)
+    ref = prep.solve(b, num_epochs=num_epochs)
+    got = restored.solve(b, num_epochs=num_epochs)
+    assert np.array_equal(np.asarray(ref.x), np.asarray(got.x))
+    for key, h in ref.history.items():
+        assert np.array_equal(np.asarray(h), np.asarray(got.history[key]))
+    return store, prep, restored
+
+
+def test_checkpoint_roundtrip_dense_qr(tmp_path, dense_prob):
+    _roundtrip(tmp_path, dense_prob.A, PREP_KW, dense_prob.b)
+
+
+def test_checkpoint_roundtrip_dense_variants(tmp_path, dense_prob):
+    # apc (pinv factors + projector), dgd (scalar factor), cgnr (no factors)
+    for i, kw in enumerate((
+        dict(num_blocks=4, method="apc"),
+        dict(num_blocks=4, method="dgd"),
+        dict(num_blocks=4, method="cgnr"),
+    )):
+        _roundtrip(tmp_path / str(i), dense_prob.A, kw, dense_prob.b)
+
+
+def test_checkpoint_roundtrip_matfree(tmp_path):
+    """The matfree state is the deep one: blocked-ELL shards, the balance
+    permutation, Jacobi weights, and per-block Gram pseudo-inverses all have
+    to come back exactly."""
+    coo = generate_schenk_like(192, seed=41)
+    b = coo.to_dense() @ np.ones(192, np.float32)
+    kw = dict(mode="matfree", num_blocks=8, method="dapc")
+    store, prep, restored = _roundtrip(tmp_path, coo, kw, b)
+    assert restored.path == prep.path == "matfree"
+    assert restored.memory_bytes == prep.memory_bytes
+
+
+def test_checkpoint_roundtrip_matfree_pcg(tmp_path):
+    coo = generate_schenk_like(192, seed=43)
+    b = coo.to_dense() @ np.ones(192, np.float32)
+    kw = dict(mode="matfree", num_blocks=8, method="dapc", gram_solver="pcg")
+    _, prep, restored = _roundtrip(tmp_path, coo, kw, b)
+    assert restored.gram_solver == prep.gram_solver == "pcg"
+
+
+def test_checkpoint_misses_are_safe(tmp_path, dense_prob):
+    store = CheckpointStore(tmp_path)
+    prep = prepare(dense_prob.A, **PREP_KW)
+    fp = matrix_fingerprint(dense_prob.A)
+    assert store.load(fp, PREP_KW) is None  # nothing saved yet
+    assert store.save(fp, prep, PREP_KW)
+
+    # a checkpoint written under other prepare settings MUST miss: the pool
+    # would otherwise serve factors that disagree with its registration
+    assert store.load(fp, dict(num_blocks=4, materialize_p=False)) is None
+    # placement kwargs don't split the key, but a mesh demand skips the store
+    assert prepare_key(PREP_KW) == prepare_key({**PREP_KW, "mesh": None})
+    assert store.load(fp, {**PREP_KW, "mesh": object()}) is None
+    # corruption degrades to a miss, never an exception
+    store.path(fp).write_bytes(b"not an npz file at all")
+    assert store.load(fp, PREP_KW) is None
+    assert store.load_misses >= 2
+    # and the happy path still counts
+    assert store.save(fp, prep, PREP_KW) and store.load(fp, PREP_KW) is not None
+
+
+def test_solve_options_positional_form_matches_kwargs(dense_prob):
+    """``solve(b, SolveOptions(...))`` is a declared surface over the same
+    kwargs — the two call forms must be bit-identical."""
+    prep = prepare(dense_prob.A, **PREP_KW)
+    opts = SolveOptions(num_epochs=25, tol=1e-4)
+    ref = prep.solve(dense_prob.b, num_epochs=25, tol=1e-4)
+    got = prep.solve(dense_prob.b, opts)
+    assert np.array_equal(np.asarray(ref.x), np.asarray(got.x))
+    assert ref.num_epochs == got.num_epochs
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.num_epochs = 1
+
+
+# -- (c) server end-to-end QoS promises --------------------------------------
+
+
+def test_interactive_overtakes_bulk_flood():
+    """A saturating bulk flood, then one interactive arrival: the
+    interactive request must complete before most of the backlog (FIFO
+    would serve it dead last)."""
+    prob = make_problem(n=48, m=192, seed=51, dtype=np.float32)
+    rng = np.random.default_rng(53)
+    xs = rng.standard_normal((48, 13)).astype(np.float32)
+    B = prob.A @ xs
+    done: list[str] = []
+
+    async def main():
+        async with SolveServer(
+            max_batch=4, max_wait_ms=5.0, num_epochs=150,
+            prepare_kwargs=PREP_KW,
+        ) as server:
+            fp = server.register(prob.A)
+            await server.submit(fp, B[:, 0])  # warm: factors + program
+            server.reset_stats()
+
+            async def bulk(i):
+                res = await server.submit(fp, B[:, i])
+                done.append(f"bulk{i}")
+                return i, res
+
+            async def interactive():
+                await asyncio.sleep(0.01)  # arrive mid-flood
+                res = await server.submit(
+                    fp, B[:, 12],
+                    SubmitOptions(priority=Priority.INTERACTIVE),
+                )
+                done.append("interactive")
+                return 12, res
+
+            results = await asyncio.gather(
+                *(bulk(i) for i in range(12)), interactive()
+            )
+            return results, server.stats()
+
+    results, stats = _run(main())
+    for i, res in results:
+        np.testing.assert_allclose(res.x, xs[:, i], atol=1e-3)
+    # 12 bulk = 3 full batches; the interactive request preempted at least
+    # the tail of the flood instead of queueing behind all of it
+    assert stats["interactive_batches"] >= 1
+    assert stats["bulk_batches"] >= 3
+    assert done.index("interactive") < len(done) - 1, (
+        f"interactive served dead last (FIFO behavior): {done}"
+    )
+
+
+def test_admission_control_rejects_deterministically():
+    """With max_pending_bulk=N, a synchronous burst of N+k bulk submits
+    must reject exactly the last k — admission is checked BEFORE the
+    request queues, so the outcome is deterministic, and interactive
+    traffic is exempt."""
+    prob = make_problem(n=48, m=192, seed=57, dtype=np.float32)
+    rng = np.random.default_rng(59)
+    xs = rng.standard_normal((48, 9)).astype(np.float32)
+    B = prob.A @ xs
+
+    async def main():
+        policy = BatchPolicy(max_batch=4, max_wait_ms=5.0, max_pending_bulk=4)
+        async with SolveServer(
+            num_epochs=150, prepare_kwargs=PREP_KW, policy=policy,
+        ) as server:
+            fp = server.register(prob.A)
+            # create_task order = first-execution order, and _enqueue has no
+            # await before the push, so all 8 submits hit admission before
+            # the dispatcher drains anything
+            tasks = [
+                asyncio.create_task(server.submit(fp, B[:, i]))
+                for i in range(8)
+            ]
+            inter = asyncio.create_task(server.submit(
+                fp, B[:, 8], SubmitOptions(priority=Priority.INTERACTIVE)
+            ))
+            results = await asyncio.gather(
+                *tasks, inter, return_exceptions=True
+            )
+            return results, server.stats()
+
+    results, stats = _run(main())
+    rejected = [r for r in results if isinstance(r, AdmissionError)]
+    served = [r for r in results if not isinstance(r, Exception)]
+    assert len(rejected) == 4 and len(served) == 5
+    assert stats["admission_rejects"] == 4
+    # the first 4 bulk submits and the interactive one were served correctly
+    for i, res in zip((0, 1, 2, 3, 8), served):
+        np.testing.assert_allclose(res.x, xs[:, i], atol=1e-3)
+
+
+def test_per_request_tol_splits_batches():
+    """Requests with different tolerances change the solve itself, so they
+    must never share a coalesced batch (the derived batch key at work)."""
+    prob = make_problem(n=48, m=192, seed=61, dtype=np.float32)
+    rng = np.random.default_rng(63)
+    xs = rng.standard_normal((48, 4)).astype(np.float32)
+    B = prob.A @ xs
+
+    async def main():
+        async with SolveServer(
+            max_batch=8, max_wait_ms=20.0, num_epochs=150,
+            prepare_kwargs=PREP_KW,
+        ) as server:
+            fp = server.register(prob.A)
+            loose = SubmitOptions(tol=1e-2)
+            results = await asyncio.gather(
+                server.submit(fp, B[:, 0]),
+                server.submit(fp, B[:, 1], loose),
+                server.submit(fp, B[:, 2]),
+                server.submit(fp, B[:, 3], loose),
+            )
+            return results, server.stats()
+
+    results, stats = _run(main())
+    assert stats["batches"] == 2  # one per distinct batch key, not four
+    assert [r.batch_size for r in results] == [2, 2, 2, 2]
+    for i, res in enumerate(results):
+        np.testing.assert_allclose(res.x, xs[:, i], atol=1e-2)
+
+
+def test_eviction_then_warm_restore_mid_session(tmp_path):
+    """A pool of ONE with a checkpoint store, two systems, a session on the
+    first: the second system evicts the session's factors, and the next
+    update must come back via checkpoint RESTORE (not a cold re-prepare)
+    with the stream unperturbed."""
+    pa = make_problem(n=48, m=192, seed=71, dtype=np.float32)
+    pb = make_problem(n=48, m=192, seed=72, dtype=np.float32)
+
+    async def main():
+        async with SolveServer(
+            max_batch=4, max_wait_ms=5.0, num_epochs=150, tol=1e-4,
+            pool_size=1, checkpoint=str(tmp_path), prepare_kwargs=PREP_KW,
+        ) as server:
+            fa, fb = server.register(pa.A), server.register(pb.A)
+            session = server.open_session(fa)
+            r0 = await session.update(pa.b)  # cold prepare of A (saved)
+            await server.submit(fb, pb.b)  # prepares B -> evicts A
+            assert fa not in server.pool
+            r1 = await session.update(pa.b)  # miss -> restore A from disk
+            return (r0, r1), server.stats()
+
+    (r0, r1), stats = _run(main())
+    np.testing.assert_allclose(r0.x, pa.x_true, atol=1e-3)
+    np.testing.assert_allclose(r1.x, pa.x_true, atol=1e-3)
+    assert stats["prepares"] == 2  # A cold, B cold — and never A again
+    assert stats["restores"] == 1  # the eviction came back from the store
+    assert stats["misses"] == 3
+    assert stats["restore_ms"] > 0.0
+    assert r1.iterations <= r0.iterations  # the stream kept its warm start
+
+
+def test_submit_options_default_shim_is_bulk_fifo():
+    """``submit(fp, b)`` must behave exactly like the historical server:
+    bulk priority, no deadline, no admission limit, batches by arrival."""
+    assert SubmitOptions() == SubmitOptions(
+        priority=Priority.BULK, deadline_ms=None, tol=None, x0=None
+    )
+    prob = make_problem(n=48, m=192, seed=81, dtype=np.float32)
+
+    async def main():
+        async with SolveServer(
+            max_batch=4, max_wait_ms=5.0, num_epochs=150,
+            prepare_kwargs=PREP_KW,
+        ) as server:
+            fp = server.register(prob.A)
+            results = await asyncio.gather(
+                *(server.submit(fp, prob.b) for _ in range(4))
+            )
+            return results, server.stats()
+
+    results, stats = _run(main())
+    assert stats["interactive_batches"] == 0
+    assert stats["bulk_batches"] == stats["batches"] >= 1
+    assert stats["admission_rejects"] == 0
+    for res in results:
+        np.testing.assert_allclose(res.x, prob.x_true, atol=1e-3)
