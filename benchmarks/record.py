@@ -15,8 +15,11 @@ past 25% from scheduling noise alone even under best-of ``--repeat``, so
 the absolute slack keeps them gated against real blowups (2x+) without
 tripping on jitter, while the ms-scale solve rows stay tightly gated by
 the relative bound. Ungated rows (demo rows, rows whose cost is measured
-elsewhere) are reported but never fail the comparison. Rows present only
-on one side are skipped with a note — renames are not regressions.
+elsewhere) are reported but never fail the comparison. A GATED baseline
+row missing from the fresh run FAILS with the row name (a silent skip
+would read as a pass); fresh-only rows and missing ungated rows are noted
+but never fail — new rows only start gating once committed to the
+baseline.
 """
 from __future__ import annotations
 
@@ -81,11 +84,21 @@ def compare_records(
     failures = []
     for row in baseline.get("rows", []):
         if not row.get("gated"):
+            if row["name"] not in fresh_rows:
+                print(f"  ~ {row['name']}: ungated baseline row missing "
+                      f"from fresh record — noted")
             continue
         name = row["name"]
         got = fresh_rows.get(name)
         if got is None:
-            print(f"  ~ {name}: not in fresh record (renamed?) — skipped")
+            # a GATED baseline row the fresh run never produced is a
+            # failure, not a skip: a silently dropped (or renamed) gated
+            # row would otherwise read as a pass forever
+            print(f"  ✗ {name}: gated baseline row missing from fresh record")
+            failures.append(
+                f"{name}: gated baseline row missing from fresh record "
+                f"(renamed or dropped? update the committed baseline too)"
+            )
             continue
         base_us, new_us = float(row["us_per_call"]), float(got["us_per_call"])
         ratio = new_us / base_us if base_us > 0 else float("inf")
@@ -102,6 +115,9 @@ def compare_records(
                 f"{name}: {new_us:.1f} us/call vs baseline {base_us:.1f} "
                 f"({ratio:.2f}x > {1.0 + max_regression:.2f}x allowed)"
             )
+    base_names = {r["name"] for r in baseline.get("rows", [])}
+    for extra in sorted(set(fresh_rows) - base_names):
+        print(f"  ~ {extra}: new row not in baseline — ungated until committed")
     return failures
 
 

@@ -14,7 +14,13 @@ contribution on top of the prepare/solve split):
                  shape the queue exists for.
 
 Acceptance gate (ISSUE 2): coalesced throughput >= 3x sequential at
-max_batch=8 on CPU. Emits ``BENCH_serving.json``. Standalone:
+max_batch=8 on CPU. ISSUE 8 adds the tracing-overhead gate: the same
+coalesced burst re-runs with a ``repro.obs.trace.Tracer`` recording every
+span, and the traced wall time must stay within 5% of the untraced run
+(with a small absolute per-request slack for CI scheduling noise — the
+same noise treatment ``record.py`` applies). The recorded trace is written
+to ``BENCH_serving_trace.json`` (Chrome trace-event; CI uploads it with
+the other BENCH artifacts). Emits ``BENCH_serving.json``. Standalone:
 
     PYTHONPATH=src python benchmarks/serving_queue.py --quick
 """
@@ -33,6 +39,7 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
         sys.path.insert(0, _p)
 
 from repro.core import prepare  # noqa: E402
+from repro.obs.trace import Tracer  # noqa: E402
 from repro.serving.queue import SolveServer, replay_trace  # noqa: E402
 from repro.sparse import make_problem  # noqa: E402
 
@@ -64,20 +71,41 @@ def run(quick: bool = False, num_requests: int = 64):
     t_seq = time.perf_counter() - t0
 
     # --- coalesced: the async micro-batching server ------------------------
-    async def serve(gaps):
+    async def serve(gaps, tracer=None):
         async with SolveServer(
             max_batch=MAX_BATCH, max_wait_ms=5.0, num_epochs=epochs,
-            tol=1e-3, prepare_kwargs=kw,
+            tol=1e-3, prepare_kwargs=kw, tracer=tracer,
         ) as server:
             fp = server.register(prob.A)
             await server.submit(fp, rhs[:, 0])  # warm the (m, MAX_BATCH) program
             server.reset_stats()  # don't count the warm-up in the trace
+            if tracer is not None:
+                tracer.clear()  # the exported trace is the measured burst
             t0 = time.perf_counter()
             results = await replay_trace(server, fp, rhs, gaps)
             wall = time.perf_counter() - t0
             return server.stats(), results, wall
 
     burst_stats, burst, t_coal = asyncio.run(serve(np.zeros(num_requests)))
+
+    # --- tracing overhead: the same burst with every span recorded ---------
+    # paired best-of-2 runs, interleaved plain/traced: burst wall time on a
+    # shared runner swings tens of percent between runs regardless of
+    # tracing, so comparing against t_coal (measured in a different machine
+    # state) would gate on scheduler luck, not on the tracer
+    tracer = Tracer()
+    t_plain, t_traced = float("inf"), float("inf")
+    for _ in range(3):
+        _, _, tp = asyncio.run(serve(np.zeros(num_requests)))
+        t_plain = min(t_plain, tp)
+        _, _, tt = asyncio.run(
+            serve(np.zeros(num_requests), tracer=tracer)
+        )  # serve() clears the tracer post-warm-up: spans = last burst
+        t_traced = min(t_traced, tt)
+    overhead = t_traced / t_plain
+    num_spans = len(tracer.spans())
+    trace_path = _ROOT / "BENCH_serving_trace.json"
+    tracer.export_chrome(trace_path)
 
     # --- poisson trace: arrivals at ~2x the sequential service rate --------
     rate = 2.0 * num_requests / t_seq
@@ -113,6 +141,18 @@ def run(quick: bool = False, num_requests: int = 64):
             ),
         },
         {
+            "name": (
+                f"serving/coalesced_traced_{num_requests}x_{m}x{n}"
+                f"_b{MAX_BATCH}"
+            ),
+            "us_per_call": t_traced / num_requests * 1e6,
+            "derived": (
+                f"total={t_traced:.3f}s overhead_vs_untraced="
+                f"{overhead:.3f}x spans={num_spans} "
+                f"trace={trace_path.name}"
+            ),
+        },
+        {
             "name": f"serving/poisson_{num_requests}x_{m}x{n}_b{MAX_BATCH}",
             "us_per_call": t_poisson / num_requests * 1e6,
             "derived": (
@@ -125,9 +165,20 @@ def run(quick: bool = False, num_requests: int = 64):
             ),
         },
     ]
+    # <=5% relative, with an absolute per-request slack at record.py's
+    # 500us noise floor: the span appends cost single-digit microseconds,
+    # but a CI runner's scheduler moves a sub-second wall measurement by
+    # more than 5% on its own — the gate is against tracing becoming
+    # EXPENSIVE, not against scheduler jitter
+    tracing_ok = overhead <= 1.05 or (
+        (t_traced - t_plain) / num_requests * 1e6 <= 500.0
+    )
     checks = {
         "coalesced_speedup_vs_sequential": speedup,
         "max_abs_err": err,
+        "tracing_overhead_ratio": overhead,
+        "tracing_overhead_pass": tracing_ok,
+        "trace_spans": num_spans,
         "burst_p50_ms": bp["p50_ms"],
         "burst_p99_ms": bp["p99_ms"],
         "poisson_p50_ms": pp["p50_ms"],
@@ -156,10 +207,16 @@ def main():
     print(f"wrote {path}")
 
     speedup = checks["coalesced_speedup_vs_sequential"]
-    ok = speedup >= 3.0 and checks["max_abs_err"] <= 1e-3
+    ok = (
+        speedup >= 3.0
+        and checks["max_abs_err"] <= 1e-3
+        and checks["tracing_overhead_pass"]
+    )
     print(
         f"acceptance: coalesced_vs_sequential={speedup:.2f}x (need >=3x), "
-        f"maxerr={checks['max_abs_err']:.1e} (need <=1e-3) -> "
+        f"maxerr={checks['max_abs_err']:.1e} (need <=1e-3), "
+        f"tracing_overhead={checks['tracing_overhead_ratio']:.3f}x "
+        f"(need <=1.05x or <=500us/req absolute) -> "
         f"{'PASS' if ok else 'FAIL'}"
     )
     raise SystemExit(0 if ok else 1)

@@ -68,52 +68,20 @@ DEVICE_FRACTION_GATE = 1.15 / DEVICES
 
 # ---------------------------------------------------------------------------
 # collective-payload audit (runs on the traced program, not on wall clock)
+# — the walker lives in repro.obs.convergence so any deployment can assert
+# the same per-epoch comms budget this benchmark gates on
 # ---------------------------------------------------------------------------
-
-
-def _as_jaxpr(v):
-    if hasattr(v, "eqns"):
-        return v
-    if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
-        return v.jaxpr
-    return None
-
-
-def _collect_reduces(jpr, in_scan, found):
-    """All psum-family eqns under ``jpr``, flagged with scan membership."""
-    for eqn in jpr.eqns:
-        name = eqn.primitive.name
-        if "psum" in name or "pmax" in name or "pmin" in name:
-            found.append(
-                (in_scan, name,
-                 sum(int(np.prod(o.aval.shape)) for o in eqn.outvars))
-            )
-        inside = in_scan or name == "scan"
-        for v in eqn.params.values():
-            subs = v if isinstance(v, (list, tuple)) else (v,)
-            for u in subs:
-                sub = _as_jaxpr(u)
-                if sub is not None:
-                    _collect_reduces(sub, inside, found)
-    return found
 
 
 def epoch_collective_payload(prep, bvecs, num_epochs, tol=None):
     """(elements per epoch, op count per epoch) of the sharded program's
-    in-scan collectives — the communication an epoch actually pays."""
-    import jax
-    import jax.numpy as jnp
+    in-scan collectives — the communication an epoch actually pays.
+    Thin wrapper over ``repro.obs.convergence.audit_epoch_collectives``."""
+    from repro.obs.convergence import audit_epoch_collectives
 
-    run = prep._solve_program(num_epochs, prep.inner_iters, False, tol)
-    dtype = prep.op.fwd_data.dtype
-    closed = jax.make_jaxpr(run)(
-        prep.op, prep.diag_inv, prep.gram_inv, bvecs,
-        jnp.asarray(GAMMA, dtype), jnp.asarray(ETA, dtype), None,
-        None,  # x0: the audited program is the cold (no-warm-start) one
-    )
-    found = _collect_reduces(closed.jaxpr, False, [])
-    in_scan = [f for f in found if f[0]]
-    return sum(f[2] for f in in_scan), len(in_scan)
+    audit = audit_epoch_collectives(prep, None, num_epochs, tol=tol,
+                                    bvecs=bvecs)
+    return audit["payload_elems"], audit["ops"]
 
 
 # ---------------------------------------------------------------------------

@@ -47,12 +47,21 @@ def run_consensus(
     compress: str | None = None,  # None | "bf16_delta"
     xbar0: jnp.ndarray | None = None,  # warm start (elastic restart)
     tol: float | None = None,  # masked per-column early exit
+    block_history: bool = False,  # per-block residual diagnostics
 ):
     """Paper eqs. (5)–(7). Returns (x̄_final, history dict).
 
     history carries per-epoch MSE to ``x_ref`` (paper Fig. 2 metric) and the
     global residual when (blocks, bvecs) are supplied; with a batched
     ``(J, n, k)`` input both metrics are per-system ``(k,)`` rows.
+
+    ``block_history=True`` additionally records the PER-BLOCK residual
+    ``history["block_residual_sq"]`` — ``(J,)`` per epoch, ``(J, k)``
+    batched — the convergence diagnostic ``repro.obs.convergence``
+    summarizes (which block drags, per-block decay rates). It reuses the
+    residual pass's per-block partials, so enabling it adds reductions
+    only, never another projector application; disabled (the default) the
+    program is untouched.
 
     ``tol`` arms the masked in-scan early exit: a column whose residual
     reaches ``residual_sq <= tol²`` FREEZES — its xs/x̄ columns stop
@@ -83,6 +92,9 @@ def run_consensus(
     if tol is not None and (blocks is None or bvecs is None):
         raise ValueError("tol early exit needs (blocks, bvecs) for residuals")
 
+    if block_history and (blocks is None or bvecs is None):
+        raise ValueError("block_history needs (blocks, bvecs) for residuals")
+
     def metrics(xbar):
         out = {}
         if x_ref is not None:
@@ -90,7 +102,16 @@ def run_consensus(
             d = xbar - ref
             out["mse"] = jnp.mean(d * d, axis=0)
         if blocks is not None and bvecs is not None:
-            out["residual_sq"] = block_residual_sq(blocks, bvecs, xbar)
+            if block_history:
+                r = (
+                    jnp.einsum("jpn,n...->jp...", blocks, xbar)
+                    - _match_rhs(bvecs, xbar)
+                )
+                per_block = jnp.sum(r * r, axis=1)  # (J,) or (J, k)
+                out["block_residual_sq"] = per_block
+                out["residual_sq"] = jnp.sum(per_block, axis=0)
+            else:
+                out["residual_sq"] = block_residual_sq(blocks, bvecs, xbar)
         return out
 
     init_metrics = metrics(xbar0)

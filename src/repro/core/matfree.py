@@ -227,6 +227,7 @@ def consensus_epochs(
     reduce_sum=_identity,
     iters_reduce=_identity,
     x0=None,  # (n, k) predicted solution, or masked pair ((n, k), (k,))
+    block_history: bool = False,  # per-block residual diagnostics
 ):
     """The fused-projection consensus iteration, mesh-agnostic.
 
@@ -258,6 +259,14 @@ def consensus_epochs(
     KNOWN needs, so recomputing it at epoch start would double the payload.
     Carrying it is float-identical to the historical recompute (same op on
     the same carried ``xs``).
+
+    ``block_history=True`` additionally emits the per-block residual
+    ``history["block_residual_sq"]`` each epoch, read off the SAME carried
+    probe ``z`` the scalar residual uses — a (J_loc, k) row-axis reduction,
+    no extra tile pass. Sharded callers ride it through their ``out_specs``
+    exactly like the residual partials (each shard's (J_loc, k) rows
+    concatenate to the global (J, k) on the host), so enabling it adds NO
+    extra collective to the epoch; disabled, the program is untouched.
 
     Returns ``(x̄ (n, k), history)`` with the same history contract as
     ``MatrixFreePreparedSolver.solve`` documents.
@@ -341,7 +350,8 @@ def consensus_epochs(
     def step(carry, _):
         xs, xbar, q, w, z, ywarm = carry
         # residual of the CURRENT x̄, read off the carried probe
-        resid = reduce_sum(jnp.sum((z - bvecs) ** 2, axis=(0, 1)))
+        r_sq = (z - bvecs) ** 2
+        resid = reduce_sum(jnp.sum(r_sq, axis=(0, 1)))
         if tol2 is None:
             carry, used = live_step(xs, xbar, q, w, z, ywarm, None)
         else:
@@ -353,6 +363,8 @@ def consensus_epochs(
                 (xs, xbar, q, w, z, ywarm),
             )
         out = {"residual_sq": resid, "inner_iters": used}
+        if block_history:  # shard-local rows; no collective (see docstring)
+            out["block_residual_sq"] = jnp.sum(r_sq, axis=1)
         if ref is not None:
             out["mse"] = mse(carry[1])
         return carry, out
@@ -371,6 +383,13 @@ def consensus_epochs(
     hist["initial"] = {
         "residual_sq": emitted[0], "inner_iters": setup_iters,
     }
+    if block_history:  # same one-epoch shift as the scalar residual
+        emitted_b = hist.pop("block_residual_sq")
+        rb_fin = jnp.sum(rfin * rfin, axis=1)
+        hist["block_residual_sq"] = jnp.concatenate(
+            [emitted_b[1:], rb_fin[None]]
+        )
+        hist["initial"]["block_residual_sq"] = emitted_b[0]
     if ref is not None:
         hist["initial"]["mse"] = mse(xbar0)
     return xbar, hist
@@ -452,8 +471,10 @@ class MatrixFreePreparedSolver:
         has_ref: bool,
         tol: float | None,
         warm_kind: str | None = None,
+        block_history: bool = False,
     ):
-        key = (num_epochs, inner_iters, has_ref, tol, warm_kind)
+        key = (num_epochs, inner_iters, has_ref, tol, warm_kind,
+               block_history)
         run = self._jit_cache.get(key)
         if run is None:
 
@@ -469,6 +490,7 @@ class MatrixFreePreparedSolver:
                     tol2=None if tol is None else float(tol) ** 2,
                     num_epochs=num_epochs,
                     x0=x0,
+                    block_history=block_history,
                 )
 
             run = jax.jit(solve_phase)
@@ -485,6 +507,7 @@ class MatrixFreePreparedSolver:
         inner_iters: int | None = None,
         tol: float | None = None,
         x0: np.ndarray | tuple | None = None,
+        block_history: bool = False,
     ) -> SolveResult:
         """Consensus solve against the cached sparse operator.
 
@@ -507,6 +530,11 @@ class MatrixFreePreparedSolver:
         ``num_epochs`` may be a ``SolveOptions``: ``solve(b,
         SolveOptions(...))`` is the typed equivalent of the kwargs form
         (same declared surface on every path, including sharded).
+
+        ``block_history=True`` records ``history["block_residual_sq"]``
+        (per-epoch per-block residuals off the carried probe — no extra
+        tile pass; see ``repro.obs.convergence`` for the diagnostics
+        built on it). The default leaves the compiled program untouched.
         """
         if isinstance(num_epochs, SolveOptions):
             return self.solve(b, **num_epochs.kwargs())
@@ -527,6 +555,7 @@ class MatrixFreePreparedSolver:
             warm_kind=None if warm is None else (
                 "masked" if isinstance(warm, tuple) else "x0"
             ),
+            block_history=bool(block_history),
         )
         x, hist = run(
             self.op, self.diag_inv, self.gram_inv, bvecs,

@@ -107,8 +107,10 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
         has_ref: bool,
         tol: float | None,
         warm_kind: str | None = None,
+        block_history: bool = False,
     ):
-        key = (num_epochs, inner_iters, has_ref, tol, warm_kind)
+        key = (num_epochs, inner_iters, has_ref, tol, warm_kind,
+               block_history)
         run = self._jit_cache.get(key)
         if run is None:
             axes, red = self._axes()
@@ -143,6 +145,13 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
                 "inner_iters": P(),
                 "initial": {"residual_sq": rs, "inner_iters": P()},
             }
+            if block_history:
+                # per-block rows are block-SHARDED by construction: each
+                # shard's (E, J_loc, k) trace concatenates along the block
+                # axis into the global (E, J, k) — diagnostics ride the
+                # out_specs with ZERO extra in-scan collectives
+                hist_spec["block_residual_sq"] = P(None, axes)
+                hist_spec["initial"]["block_residual_sq"] = P(axes)
             if has_ref:
                 hist_spec["mse"] = P()
                 hist_spec["initial"]["mse"] = P()
@@ -169,6 +178,7 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
                     ),
                     iters_reduce=lambda c: jax.lax.pmax(c, red),
                     x0=x0,
+                    block_history=block_history,
                 )
 
             inner = shard_map_unchecked(

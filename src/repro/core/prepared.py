@@ -112,6 +112,8 @@ class SolveOptions:
     x0: Any = None  # (n,) | (n, k) | (x0, mask) warm start (consensus only)
     x_ref: Any = None
     inner_iters: int | None = None  # matfree paths only
+    block_history: bool | None = None  # per-block residual diagnostics
+    # (consensus methods; see repro.obs.convergence)
     method_kwargs: dict = dataclasses.field(default_factory=dict)
 
     def kwargs(self) -> dict:
@@ -425,8 +427,12 @@ class PreparedSolver:
         one-shot columns share one compiled batch.
 
         kwargs are forwarded to the method (``avg_every``/``compress``/
-        ``xbar0``/``tol`` for the consensus methods, ``tol`` for cgnr,
-        ``lr`` for dgd). For apc/dapc, ``tol`` arms the masked per-column
+        ``xbar0``/``tol``/``block_history`` for the consensus methods,
+        ``tol`` for cgnr, ``lr`` for dgd). ``block_history=True``
+        (apc/dapc) records per-epoch PER-BLOCK residuals in
+        ``history["block_residual_sq"]`` — the convergence diagnostic
+        ``repro.obs.convergence`` consumes; the default leaves the
+        compiled program untouched. For apc/dapc, ``tol`` arms the masked per-column
         early exit: columns that reach ``residual_sq <= tol²`` freeze
         in-scan (``repro.core.consensus``) while the batch keeps one
         compiled shape — matching the matfree path's ``solve(tol=...)``.

@@ -76,6 +76,27 @@ def build_parser() -> argparse.ArgumentParser:
                     help="[drifting] per-component drift amplitude of the "
                          "underlying solution between updates")
     ap.add_argument("--seed", type=int, default=0)
+    obs = ap.add_argument_group("observability (repro.obs)")
+    obs.add_argument("--trace-out", default=None, metavar="FILE",
+                     help="record request spans and write a Chrome "
+                          "trace-event JSON (open directly in Perfetto / "
+                          "chrome://tracing: one track per request, server "
+                          "batches on track 0)")
+    obs.add_argument("--trace-jsonl", default=None, metavar="FILE",
+                     help="also write the spans as JSON-lines (the "
+                          "tools/trace_report.py input format)")
+    obs.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                     help="serve the Prometheus text exposition of the "
+                          "server's metrics registry on this port "
+                          "(0 = ephemeral; the bound port is printed)")
+    obs.add_argument("--stats-every", type=float, default=0.0, metavar="SEC",
+                     help="print a periodic server-stats line every SEC "
+                          "seconds while the trace replays (0 = off)")
+    obs.add_argument("--block-history", action="store_true",
+                     help="enable per-block residual diagnostics on the "
+                          "served solves (consensus methods) and print the "
+                          "convergence report — slowest block, imbalance — "
+                          "after the replay")
     return ap
 
 
@@ -163,7 +184,6 @@ def main(argv=None) -> None:
 
         force_host_device_count(args.mesh)
 
-    from repro.serving.queue import SolveServer, replay_trace
     from repro.sparse import make_problem
 
     mesh = None
@@ -175,6 +195,18 @@ def main(argv=None) -> None:
     prob = make_problem(n=args.n, m=args.m, seed=args.seed, dtype=np.float32)
     rng = np.random.default_rng(args.seed + 1)
 
+    from repro.obs.metrics import MetricsRegistry, start_exposition
+    from repro.obs.trace import Tracer
+
+    tracer = Tracer() if (args.trace_out or args.trace_jsonl) else None
+    registry = MetricsRegistry()
+    exposition = None
+    if args.metrics_port is not None:
+        exposition = start_exposition(registry, port=args.metrics_port)
+        host, port = exposition.server_address[:2]
+        print(f"metrics: serving Prometheus exposition on "
+              f"http://{host}:{port}/metrics")
+
     server_kwargs = dict(
         max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms,
@@ -182,15 +214,43 @@ def main(argv=None) -> None:
         tol=args.tol,
         pool_size=args.pool_size,
         checkpoint=args.checkpoint_dir,
+        metrics=registry,
+        tracer=tracer,
         prepare_kwargs=dict(
             method=args.method, num_blocks=args.num_blocks,
             materialize_p=False, mode=args.mode,
             **({"mesh": mesh} if mesh is not None else {}),
         ),
+        **(
+            {"solve_kwargs": {"block_history": True}}
+            if args.block_history else {}
+        ),
     )
     # register the sparse COO for square systems (the matfree path then
     # never densifies); augmented systems are dense by nature
     system = prob.coo if args.m == args.n else prob.A
+
+    def finish_obs():
+        if tracer is not None:
+            if args.trace_out:
+                count = tracer.export_chrome(args.trace_out)
+                print(f"trace: {count} spans -> {args.trace_out} "
+                      f"(Chrome trace-event; open in Perfetto)")
+            if args.trace_jsonl:
+                count = tracer.export_jsonl(args.trace_jsonl)
+                print(f"trace: {count} spans -> {args.trace_jsonl} (jsonl)")
+        if exposition is not None:
+            exposition.shutdown()
+            exposition.server_close()
+
+    try:
+        _run_replay(args, prob, system, server_kwargs, rng, tracer)
+    finally:
+        finish_obs()
+
+
+def _run_replay(args, prob, system, server_kwargs, rng, tracer) -> None:
+    from repro.serving.queue import SolveServer, replay_trace
 
     if args.trace == "drifting":
         _run_drifting(args, prob, system, server_kwargs, rng)
@@ -207,12 +267,44 @@ def main(argv=None) -> None:
             # warm the compiled programs so the trace measures steady state
             await server.submit(fp, rhs[:, 0])
             server.reset_stats()  # report the trace, not the warm-up
+            if tracer is not None:
+                tracer.clear()  # export the measured trace only
+
+            ticker = None
+            if args.stats_every > 0:
+
+                async def tick():
+                    while True:
+                        await asyncio.sleep(args.stats_every)
+                        s = server.stats()
+                        print(f"[stats] requests={s['requests']} "
+                              f"batches={s['batches']} "
+                              f"mean_batch={s['mean_batch_size']:.2f} "
+                              f"pool_hits={s['hits']} "
+                              f"rejects={s['admission_rejects']}")
+
+                ticker = asyncio.create_task(tick())
             t0 = time.perf_counter()
             results = await replay_trace(server, fp, rhs, gaps)
             wall = time.perf_counter() - t0
-            return server.stats(), results, wall, server.pool.resident()
+            if ticker is not None:
+                ticker.cancel()
+            report = None
+            if args.block_history and args.method in ("apc", "dapc"):
+                # one diagnostic solve over a few replayed columns: the
+                # per-block residual trace the convergence report reads
+                from repro.obs.convergence import convergence_report
 
-    stats, results, wall, resident = asyncio.run(serve())
+                prep = server.pool.get(fp)
+                diag = prep.solve(
+                    rhs[:, : min(4, rhs.shape[1])],
+                    num_epochs=args.epochs, block_history=True,
+                )
+                report = convergence_report(diag, tol=args.tol)
+            return (server.stats(), results, wall,
+                    server.pool.resident(), report)
+
+    stats, results, wall, resident, report = asyncio.run(serve())
 
     lat_ms = np.array([r.queue_ms + r.solve_ms for r in results])
     err = max(
@@ -257,6 +349,16 @@ def main(argv=None) -> None:
             f"pool: system {entry['fingerprint']} path={entry['path']} "
             f"factors={entry['memory_bytes'] / 1e6:.2f}MB "
             f"solves={entry['num_solves']}"
+        )
+    if report is not None:
+        rates = report["rates"]
+        print(
+            f"convergence: J={report['num_blocks']} blocks over "
+            f"{report['num_epochs']} epochs; slowest block "
+            f"{report['slowest_block'][0]} (rate {rates.max():.4f}), "
+            f"fastest {report['fastest_block'][0]} "
+            f"(rate {rates.min():.4f}); "
+            f"final-residual imbalance {report['imbalance'][0]:.2f}x"
         )
 
 

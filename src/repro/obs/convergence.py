@@ -1,0 +1,202 @@
+"""Convergence diagnostics: per-block residual decay and the collective
+audit — the numbers behind "which block is dragging convergence".
+
+``SolveResult.history`` has always aggregated the residual over blocks,
+which is exactly the quantity arXiv 2304.10640 shows hides APC's failure
+mode: when block spectra are imbalanced, one block's slow projection
+contraction dominates eq. 9's spectral-radius bound (arXiv 1708.01413)
+while the aggregate still looks like smooth geometric decay. The solvers
+now optionally record ``history["block_residual_sq"]`` — per-epoch,
+per-block ``||A_j x̄ − b_j||²`` on all three paths (dense consensus,
+matfree, sharded matfree) via ``solve(..., block_history=True)`` — and
+this module turns that trace into decisions:
+
+  * ``block_residual_history`` — normalize to ``(E, J, k)``;
+  * ``per_block_rates`` — per-block geometric decay rate estimates, the
+    empirical per-block spectral radii of eq. 9;
+  * ``convergence_report`` — slowest/fastest block, imbalance ratio, and
+    per-block epochs-to-tolerance — the partitioner-facing summary the
+    ROADMAP's heterogeneity item hangs on.
+
+It also owns the collective-count audit that CI's sharded bench gates on
+(``collect_reduces`` walks a traced program for psum-family primitives and
+flags scan membership), generalized into ``audit_epoch_collectives`` so
+ANY run — a test, a notebook, a serving deployment — can assert its
+per-epoch comms budget instead of trusting the benchmark's.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# per-block residual history
+# ---------------------------------------------------------------------------
+
+
+def block_residual_history(result) -> np.ndarray:
+    """The per-block residual trace as ``(E, J, k)`` (k=1 for one RHS).
+
+    ``result`` is a ``SolveResult`` (or any object with a ``history``
+    dict) from a solve run with ``block_history=True``; raises with the
+    enabling hint otherwise.
+    """
+    hist = result.history if hasattr(result, "history") else result
+    trace = hist.get("block_residual_sq")
+    if trace is None:
+        raise ValueError(
+            "history has no 'block_residual_sq' — run the solve with "
+            "block_history=True (consensus methods: dense, matfree, and "
+            "sharded paths all record it)"
+        )
+    trace = np.asarray(trace)
+    return trace[..., None] if trace.ndim == 2 else trace
+
+
+def per_block_rates(result, eps: float = 1e-30) -> np.ndarray:
+    """Per-block geometric decay rate estimates, shape ``(J, k)``.
+
+    Fits ``r_j(t) ≈ r_j(0)·ρ_j^t`` on the residual NORM (the history
+    stores squares, hence the 1/2): ``ρ_j = (r_j(E)/r_j(0))^(1/(2E))``.
+    This is the empirical per-block contraction factor — the quantity
+    eq. 9 of arXiv 1708.01413 bounds by the projector spectral radius —
+    so a block whose ρ_j sits near 1 while its siblings contract is the
+    heterogeneity signature. Frozen/converged columns (tol early exit)
+    repeat their final residual, which only flattens the estimate toward
+    its true converged value, never inflates it.
+    """
+    trace = block_residual_history(result)
+    E = trace.shape[0]
+    if E < 2:
+        raise ValueError(f"need >= 2 epochs to fit a rate, got {E}")
+    first = np.maximum(trace[0], eps)
+    last = np.maximum(trace[-1], eps)
+    return (last / first) ** (1.0 / (2.0 * (E - 1)))
+
+
+def convergence_report(result, tol: float | None = None) -> dict:
+    """Summarize a per-block trace: who is dragging, and by how much.
+
+    Returns (arrays are per-column where applicable):
+      * ``rates`` — ``(J, k)`` per-block decay rates (``per_block_rates``);
+      * ``slowest_block`` / ``fastest_block`` — ``(k,)`` block indices by
+        final residual share;
+      * ``imbalance`` — ``(k,)`` slowest/fastest final-residual ratio (1.0
+        = perfectly balanced decay, the uniform-partition ideal);
+      * ``block_epochs_to_tol`` — ``(J, k)`` epochs until each BLOCK's
+        residual_sq reached ``tol²/J`` (its fair share of a global
+        tolerance), ``num_epochs`` when it never did — only with ``tol``.
+    """
+    trace = block_residual_history(result)
+    E, J, _ = trace.shape
+    final = trace[-1]
+    rates = per_block_rates(result)
+    out = {
+        "num_epochs": E,
+        "num_blocks": J,
+        "rates": rates,
+        "slowest_block": np.argmax(final, axis=0),
+        "fastest_block": np.argmin(final, axis=0),
+        "imbalance": np.max(final, axis=0)
+        / np.maximum(np.min(final, axis=0), 1e-30),
+        "final_block_residual_sq": final,
+    }
+    if tol is not None:
+        share = float(tol) ** 2 / J
+        reached = trace <= share
+        out["block_epochs_to_tol"] = np.where(
+            reached.any(axis=0), reached.argmax(axis=0) + 1, E
+        ).astype(np.int64)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collective-count audit (traced-program walk; no wall clock involved)
+# ---------------------------------------------------------------------------
+
+
+def _as_jaxpr(v):
+    if hasattr(v, "eqns"):
+        return v
+    if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+        return v.jaxpr
+    return None
+
+
+def collect_reduces(jpr, in_scan=False, found=None):
+    """All psum-family eqns under ``jpr`` as ``(in_scan, name, payload)``
+    triples — payload in output elements. ``in_scan`` flags collectives
+    inside a ``lax.scan`` body, i.e. the ones an EPOCH pays."""
+    if found is None:
+        found = []
+    for eqn in jpr.eqns:
+        name = eqn.primitive.name
+        if "psum" in name or "pmax" in name or "pmin" in name:
+            found.append(
+                (in_scan, name,
+                 sum(int(np.prod(o.aval.shape)) for o in eqn.outvars))
+            )
+        inside = in_scan or name == "scan"
+        for v in eqn.params.values():
+            subs = v if isinstance(v, (list, tuple)) else (v,)
+            for u in subs:
+                sub = _as_jaxpr(u)
+                if sub is not None:
+                    collect_reduces(sub, inside, found)
+    return found
+
+
+def audit_epoch_collectives(
+    prep,
+    b,
+    num_epochs: int = 8,
+    tol: float | None = None,
+    block_history: bool = False,
+    max_payload_elems: int | None = None,
+    max_ops: int | None = None,
+    bvecs=None,
+) -> dict:
+    """Trace one sharded solve program and account its in-scan collectives.
+
+    Returns ``{"payload_elems", "ops", "found"}`` where ``payload_elems``
+    / ``ops`` cover collectives INSIDE the epoch scan only (``found`` has
+    every psum-family eqn, flagged). With ``max_payload_elems`` /
+    ``max_ops`` set it asserts the budget — the hook CI's
+    ``benchmarks/sparse_sharded.py`` gate and any production run share,
+    so "this deployment pays one n·k pmean per epoch" is checkable
+    anywhere, not a benchmark-only claim.
+
+    ``prep`` is a ``ShardedMatrixFreeSolver`` (the single-host paths have
+    no collectives to audit — they trivially pass any budget). ``b`` is the
+    right-hand side to shape the traced program with — or pass already
+    block-partitioned (possibly mesh-placed) ``bvecs`` directly.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if bvecs is None:
+        bvecs = prep.op.block_rhs(np.asarray(b))
+    dtype = prep.op.fwd_data.dtype
+    run = prep._solve_program(
+        num_epochs, prep.inner_iters, False, tol,
+        block_history=block_history,
+    )
+    closed = jax.make_jaxpr(run)(
+        prep.op, prep.diag_inv, prep.gram_inv, bvecs,
+        jnp.asarray(prep.gamma, dtype), jnp.asarray(prep.eta, dtype), None,
+        None,  # x0: audit the cold program
+    )
+    found = collect_reduces(closed.jaxpr)
+    in_scan = [f for f in found if f[0]]
+    payload = sum(f[2] for f in in_scan)
+    ops = len(in_scan)
+    if max_payload_elems is not None:
+        assert payload <= max_payload_elems, (
+            f"epoch pays {payload} collective elements > budget "
+            f"{max_payload_elems} (ops: {in_scan})"
+        )
+    if max_ops is not None:
+        assert ops <= max_ops, (
+            f"epoch pays {ops} collectives > budget {max_ops} "
+            f"(ops: {in_scan})"
+        )
+    return {"payload_elems": payload, "ops": ops, "found": found}

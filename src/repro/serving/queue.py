@@ -31,6 +31,15 @@ serving loop that manufactures them:
 Solves run on a single worker thread via ``run_in_executor`` so the event
 loop keeps accepting arrivals while a batch is on the accelerator; jax
 dispatch is not re-entrant-friendly and the single worker serializes it.
+
+Observability (``repro.obs``): every counter in this module lives in a
+``MetricsRegistry`` — ``stats()`` is a dict view over it, ``render_metrics``
+the Prometheus text form — and latency accounting reads ONE injectable
+monotonic clock (``repro.obs.clock``; pass a ``ManualClock`` for
+deterministic timing tests). Pass ``tracer=`` to record per-request spans
+(queue wait, coalesced solve, batch dispatch, pool prepare/restore) with
+zero overhead when left ``None`` — spans are back-filled at dispatch time,
+never touched on the submit hot path.
 """
 from __future__ import annotations
 
@@ -38,7 +47,6 @@ import asyncio
 import dataclasses
 import hashlib
 import threading
-import time
 from collections import OrderedDict, deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any
@@ -48,6 +56,9 @@ import numpy as np
 from repro.core import prepare
 from repro.core.prepared import ColumnResult, PreparedSolver
 from repro.core.session import SESSION_METHODS, DriftPredictor
+from repro.obs import clock as obs_clock
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import SERVER_TRACK, Tracer
 from repro.serving.checkpoint import CheckpointStore
 from repro.serving.policy import (
     AdmissionError,  # noqa: F401  (re-exported: raised by submit)
@@ -81,11 +92,17 @@ def matrix_fingerprint(A: np.ndarray | COOMatrix) -> str:
 
 @dataclasses.dataclass
 class PoolStats:
+    """Snapshot of the pool's registry counters (``PreparedPool.stats``
+    re-derives one per access, so reads are always current). Invariant:
+    ``gets == hits + prepares + restores`` — every ``get`` resolves
+    exactly one way."""
+
     prepares: int = 0  # cache misses that ran prepare() (cold misses)
     hits: int = 0
     evictions: int = 0
     restores: int = 0  # cache misses served from the checkpoint store
     restore_ms: float = 0.0  # cumulative restore wall time
+    gets: int = 0  # every pool.get call (hits + prepares + restores)
 
 
 class PreparedPool:
@@ -124,6 +141,9 @@ class PreparedPool:
         self,
         max_size: int = 4,
         checkpoint: CheckpointStore | str | None = None,
+        metrics: MetricsRegistry | None = None,
+        clock=None,
+        tracer: Tracer | None = None,
         **prepare_kwargs,
     ):
         if max_size < 1:
@@ -132,11 +152,42 @@ class PreparedPool:
         if checkpoint is not None and not isinstance(checkpoint, CheckpointStore):
             checkpoint = CheckpointStore(checkpoint)
         self.checkpoint = checkpoint
+        self.metrics = metrics or MetricsRegistry()
+        self.clock = clock or obs_clock.DEFAULT
+        self.tracer = tracer
         self.prepare_kwargs = dict(prepare_kwargs)
         self._systems: dict[str, tuple[np.ndarray, dict]] = {}
         self._lru: OrderedDict[str, PreparedSolver] = OrderedDict()
         self._lock = threading.Lock()
-        self.stats = PoolStats()
+        m = self.metrics
+        self._c_gets = m.counter(
+            "pool_gets_total", "pool.get calls (hits + prepares + restores)"
+        )
+        self._c_hits = m.counter("pool_hits_total", "LRU cache hits")
+        self._c_prepares = m.counter(
+            "pool_prepares_total", "cold misses that ran prepare()"
+        )
+        self._c_restores = m.counter(
+            "pool_restores_total", "misses served from the checkpoint store"
+        )
+        self._c_evictions = m.counter("pool_evictions_total", "LRU evictions")
+        self._c_restore_ms = m.counter(
+            "pool_restore_ms_total", "cumulative checkpoint restore time"
+        )
+
+    @property
+    def stats(self) -> PoolStats:
+        """Current counters as a ``PoolStats`` snapshot (registry-backed:
+        each access re-reads, so held references are point-in-time)."""
+        v = self.metrics.value
+        return PoolStats(
+            prepares=int(v("pool_prepares_total")),
+            hits=int(v("pool_hits_total")),
+            evictions=int(v("pool_evictions_total")),
+            restores=int(v("pool_restores_total")),
+            restore_ms=v("pool_restore_ms_total"),
+            gets=int(v("pool_gets_total")),
+        )
 
     def register(self, A: np.ndarray | COOMatrix, **prepare_kwargs) -> str:
         """Record a system for later ``get``s; returns its fingerprint.
@@ -166,11 +217,12 @@ class PreparedPool:
     def get(self, fingerprint: str) -> PreparedSolver:
         """The PreparedSolver for ``fingerprint`` — LRU hit, checkpoint
         restore, or re-prepare (in that order of preference/cost)."""
+        self._c_gets.inc()
         with self._lock:
             prep = self._lru.get(fingerprint)
             if prep is not None:
                 self._lru.move_to_end(fingerprint)
-                self.stats.hits += 1
+                self._c_hits.inc()
                 return prep
             if fingerprint not in self._systems:
                 raise KeyError(
@@ -181,25 +233,37 @@ class PreparedPool:
         restore_ms = None
         prep = None
         if self.checkpoint is not None:
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
             prep = self.checkpoint.load(fingerprint, kwargs)
             if prep is not None:
-                restore_ms = (time.perf_counter() - t0) * 1e3
+                t1 = self.clock.now()
+                restore_ms = (t1 - t0) * 1e3
+                if self.tracer is not None:
+                    self.tracer.span_at(
+                        "pool.restore", t0, t1, cat="pool",
+                        fingerprint=fingerprint,
+                    )
         if prep is None:
+            t0 = self.clock.now()
             prep = prepare(A, **kwargs)
+            if self.tracer is not None:
+                self.tracer.span_at(
+                    "pool.prepare", t0, self.clock.now(), cat="pool",
+                    fingerprint=fingerprint,
+                )
             if self.checkpoint is not None:  # write-through for next miss
                 self.checkpoint.save(fingerprint, prep, kwargs)
         with self._lock:
             if restore_ms is None:
-                self.stats.prepares += 1
+                self._c_prepares.inc()
             else:
-                self.stats.restores += 1
-                self.stats.restore_ms += restore_ms
+                self._c_restores.inc()
+                self._c_restore_ms.inc(restore_ms)
             self._lru[fingerprint] = prep
             self._lru.move_to_end(fingerprint)
             while len(self._lru) > self.max_size:
                 self._lru.popitem(last=False)
-                self.stats.evictions += 1
+                self._c_evictions.inc()
         return prep
 
     def resident(self) -> list[dict]:
@@ -245,6 +309,10 @@ class RequestResult(ColumnResult):
 
 @dataclasses.dataclass
 class ServerStats:
+    """Snapshot of the dispatcher's registry counters (``SolveServer``
+    re-derives one per ``stats()`` call — held references are
+    point-in-time, not live)."""
+
     requests: int = 0
     batches: int = 0
     full_batches: int = 0  # flushed because the class's batch cap was reached
@@ -263,15 +331,18 @@ class ServerStats:
 class _Pending:
     __slots__ = (
         "b", "future", "t_enqueue", "options", "deadline_at", "batch_key",
+        "trace_id",
     )
 
-    def __init__(self, b, future, t_enqueue, options, deadline_at):
+    def __init__(self, b, future, t_enqueue, options, deadline_at,
+                 trace_id=0):
         self.b = b
         self.future = future
         self.t_enqueue = t_enqueue
         self.options = options  # SubmitOptions (x0 = session warm start)
-        self.deadline_at = deadline_at  # absolute loop time, or None
+        self.deadline_at = deadline_at  # absolute clock time, or None
         self.batch_key = batch_key(options)
+        self.trace_id = trace_id  # 0 when tracing is off
 
 
 class _PendingQueue:
@@ -351,6 +422,9 @@ class SolveServer:
         bucket_pad: bool = True,
         policy: BatchPolicy | None = None,
         checkpoint: CheckpointStore | str | None = None,
+        metrics: MetricsRegistry | None = None,
+        tracer: Tracer | None = None,
+        clock=None,
     ):
         """``bucket_pad=True`` pads a partial batch with zero columns up to
         ``max_batch`` so every dispatch reuses ONE compiled (m, max_batch)
@@ -358,20 +432,65 @@ class SolveServer:
         its own executable, and a bursty trace pays a compile per new width
         (shape bucketing, the standard serving fix). The consensus iteration
         is column-separable, so padding cannot perturb real columns; padded
-        columns are dropped before scatter."""
+        columns are dropped before scatter.
+
+        ``metrics``/``tracer``/``clock`` are the observability hooks
+        (``repro.obs``): the registry backs every counter ``stats()``
+        reports (one is created per server when omitted), the tracer —
+        ``None`` = record nothing, cost nothing — gets per-request
+        queue/solve spans and per-batch dispatch spans, and ``clock`` is
+        THE monotonic time source for all latency accounting (defaults to
+        the tracer's clock so spans and ``queue_ms`` agree, else the
+        process-wide ``repro.obs.clock.DEFAULT``)."""
         self.policy = policy or BatchPolicy(
             max_batch=int(max_batch), max_wait_ms=float(max_wait_ms)
         )
         self.max_batch = self.policy.max_batch
         self.max_wait_ms = self.policy.max_wait_ms
+        self.metrics = metrics or MetricsRegistry()
+        self.tracer = tracer
+        if clock is None:
+            clock = tracer._clock if tracer is not None else obs_clock.DEFAULT
+        self.clock = clock
         self.pool = pool or PreparedPool(
-            pool_size, checkpoint=checkpoint, **(prepare_kwargs or {})
+            pool_size, checkpoint=checkpoint, metrics=self.metrics,
+            clock=self.clock, tracer=tracer, **(prepare_kwargs or {})
         )
         self.num_epochs = int(num_epochs)
         self.tol = tol
         self.bucket_pad = bool(bucket_pad)
         self.solve_kwargs = dict(solve_kwargs or {})
-        self._stats = ServerStats()
+        m = self.metrics
+        self._c_requests = m.counter(
+            "server_requests_total", "requests completed"
+        )
+        self._c_batches = m.counter(
+            "server_batches_total", "coalesced batches dispatched"
+        )
+        self._c_flushes = m.counter(
+            "server_flushes_total", "batch flushes by trigger reason"
+        )
+        self._c_class = m.counter(
+            "server_class_batches_total", "batches by priority class"
+        )
+        self._c_rejects = m.counter(
+            "server_admission_rejects_total",
+            "bulk submits refused by max_pending_bulk",
+        )
+        self._h_queue_ms = m.histogram(
+            "server_queue_ms", "enqueue to batch dispatch, per request"
+        )
+        self._h_solve_ms = m.histogram(
+            "server_solve_ms", "batch dispatch to results ready"
+        )
+        self._h_batch_size = m.histogram(
+            "server_batch_size", "coalesced requests per dispatched batch",
+            buckets=(1, 2, 4, 8, 16, 32, 64),
+        )
+        self._g_ewma = m.gauge(
+            "server_solve_ewma_seconds",
+            "EWMA batch solve time (the policy's deadline estimate)",
+        )
         self._queues: dict[str, _PendingQueue] = {}
         self._dispatchers: dict[str, asyncio.Task] = {}
         self._solve_s: dict[str, float] = {}  # EWMA batch solve time
@@ -399,22 +518,61 @@ class SolveServer:
 
     # -- observability ------------------------------------------------------
 
+    @property
+    def _stats(self) -> ServerStats:
+        """Registry-backed dispatcher-counter snapshot (see ``stats()``)."""
+        v = self.metrics.value
+        return ServerStats(
+            requests=int(v("server_requests_total")),
+            batches=int(v("server_batches_total")),
+            full_batches=int(v("server_flushes_total", reason="full")),
+            timeout_flushes=int(v("server_flushes_total", reason="timeout")),
+            deadline_flushes=int(
+                v("server_flushes_total", reason="deadline")
+            ),
+            drain_flushes=int(v("server_flushes_total", reason="drain")),
+            interactive_batches=int(
+                v("server_class_batches_total", priority="interactive")
+            ),
+            bulk_batches=int(v("server_class_batches_total", priority="bulk")),
+            admission_rejects=int(v("server_admission_rejects_total")),
+        )
+
     def stats(self) -> dict:
         """The unified serving-stats view: dispatcher counters (requests,
         batches, flush reasons, per-class batches, admission rejects) merged
-        flat with the pool's cache counters — hits / misses (prepares +
-        restores) / evictions — and the checkpoint restore metrics
-        (``restores``, ``restore_ms``)."""
-        out = dataclasses.asdict(self._stats)
-        out["mean_batch_size"] = self._stats.mean_batch_size
-        out.update(dataclasses.asdict(self.pool.stats))
-        out["misses"] = self.pool.stats.prepares + self.pool.stats.restores
+        flat with the pool's cache counters — gets / hits / misses
+        (prepares + restores) / evictions — and the checkpoint restore
+        metrics (``restores``, ``restore_ms``). Every value is a view over
+        the ``MetricsRegistry`` (``self.metrics``) — the same numbers
+        ``render_metrics`` exposes to a Prometheus scraper."""
+        snap = self._stats
+        out = dataclasses.asdict(snap)
+        out["mean_batch_size"] = snap.mean_batch_size
+        pool = self.pool.stats
+        out.update(dataclasses.asdict(pool))
+        out["misses"] = pool.prepares + pool.restores
         return out
 
     def reset_stats(self) -> None:
         """Zero the dispatcher counters (e.g. after warm-up, so a measured
-        trace reports itself). Pool/checkpoint counters are cumulative."""
-        self._stats = ServerStats()
+        trace reports itself). Pool/checkpoint counters are cumulative; the
+        EWMA solve-time gauge survives too (it is a policy input, not a
+        trace counter)."""
+        for name in (
+            "server_requests_total", "server_batches_total",
+            "server_flushes_total", "server_class_batches_total",
+            "server_admission_rejects_total", "server_queue_ms",
+            "server_solve_ms", "server_batch_size",
+        ):
+            metric = self.metrics.get(name)
+            if metric is not None:
+                metric.reset()
+
+    def render_metrics(self) -> str:
+        """The Prometheus text exposition of this server's registry (serve
+        it with ``repro.obs.metrics.start_exposition(server.metrics)``)."""
+        return self.metrics.render()
 
     # -- request path -------------------------------------------------------
 
@@ -458,6 +616,7 @@ class SolveServer:
         fingerprint: str,
         b: np.ndarray,
         options: SubmitOptions | None = None,
+        trace_id: int | None = None,
     ) -> RequestResult:
         if self._closed:
             raise RuntimeError("server is closed")
@@ -476,15 +635,19 @@ class SolveServer:
         try:  # admission control: fail fast BEFORE the request queues
             self.policy.admit(options.priority, queue.backlog(Priority.BULK))
         except AdmissionError:
-            self._stats.admission_rejects += 1
+            self._c_rejects.inc()
             raise
+        if trace_id is None:
+            trace_id = (
+                self.tracer.new_trace_id() if self.tracer is not None else 0
+            )
         future: asyncio.Future = loop.create_future()
-        now = loop.time()
+        now = self.clock.now()
         deadline_at = (
             None if options.deadline_ms is None
             else now + options.deadline_ms / 1e3
         )
-        queue.push(_Pending(b, future, now, options, deadline_at))
+        queue.push(_Pending(b, future, now, options, deadline_at, trace_id))
         return await future
 
     # -- batching loop ------------------------------------------------------
@@ -494,7 +657,6 @@ class SolveServer:
         which class to flush (or when to wake), dispatch, repeat. Strictly
         interactive-first by construction of ``BatchPolicy.decide``; on
         close the queue drains — pending requests still complete."""
-        loop = asyncio.get_running_loop()
         while True:
             if queue.empty():
                 if queue.closed:
@@ -503,37 +665,34 @@ class SolveServer:
                 queue.event.clear()
                 continue
             priority, reason, wake = self.policy.decide(
-                loop.time(), queue.pending,
+                self.clock.now(), queue.pending,
                 solve_s=self._solve_s.get(fingerprint, 0.0),
                 draining=queue.closed,
             )
             if priority is None:  # sleep until the decision can change
                 try:
                     await asyncio.wait_for(
-                        queue.event.wait(), max(0.0, wake - loop.time())
+                        queue.event.wait(),
+                        max(0.0, wake - self.clock.now()),
                     )
                     queue.event.clear()
                 except asyncio.TimeoutError:
                     pass
                 continue
             batch = queue.take(priority, self.policy.cap(priority))
-            counters = {
-                "full": "full_batches", "timeout": "timeout_flushes",
-                "deadline": "deadline_flushes", "drain": "drain_flushes",
-            }
-            setattr(
-                self._stats, counters[reason],
-                getattr(self._stats, counters[reason]) + 1,
-            )
-            if priority is Priority.INTERACTIVE:
-                self._stats.interactive_batches += 1
-            else:
-                self._stats.bulk_batches += 1
-            await self._solve_batch(fingerprint, batch)
+            self._c_flushes.labels(reason=reason).inc()
+            self._c_class.labels(priority=priority.name.lower()).inc()
+            await self._solve_batch(fingerprint, batch, reason, priority)
 
-    async def _solve_batch(self, fingerprint: str, batch: list[_Pending]):
+    async def _solve_batch(
+        self,
+        fingerprint: str,
+        batch: list[_Pending],
+        reason: str = "full",
+        priority: Priority = Priority.BULK,
+    ):
         loop = asyncio.get_running_loop()
-        t_dispatch = loop.time()
+        t_dispatch = self.clock.now()
         # the batch shares one batch key (``_PendingQueue.take`` groups on
         # it), so per-request solve options are batch-uniform here
         tol = batch[0].options.tol
@@ -574,14 +733,27 @@ class SolveServer:
                 # the projection warm start is consensus-only; on other
                 # methods the prediction is silently dropped (cold solve)
                 kwargs["x0"] = x0_arg
+            if kwargs.get("block_history") and prep.method not in SESSION_METHODS:
+                # per-block diagnostics are consensus-only (cgnr/dgd have no
+                # block decomposition to attribute residuals to)
+                kwargs.pop("block_history")
             return prep.solve(B, num_epochs=self.num_epochs, **kwargs)
 
         try:
             result = await loop.run_in_executor(self._executor, run)
-            solve_ms = (loop.time() - t_dispatch) * 1e3
+            t_done = self.clock.now()
+            solve_ms = (t_done - t_dispatch) * 1e3
             columns = result.per_column(tol=tol)
         except Exception as exc:  # scatter the failure to every batchmate —
             # the dispatcher task must survive, or pending submits hang
+            if self.tracer is not None:
+                self.tracer.span_at(
+                    "batch", t_dispatch, self.clock.now(),
+                    trace_id=SERVER_TRACK, cat="server",
+                    fingerprint=fingerprint, batch_size=len(batch),
+                    reason=reason, priority=priority.name.lower(),
+                    error=repr(exc),
+                )
             for pending in batch:
                 if not pending.future.done():
                     pending.future.set_exception(exc)
@@ -591,9 +763,39 @@ class SolveServer:
         prev = self._solve_s.get(fingerprint)
         dt = solve_ms / 1e3
         self._solve_s[fingerprint] = dt if prev is None else 0.7 * prev + 0.3 * dt
-        self._stats.requests += len(batch)
-        self._stats.batches += 1
-        for pending, col in zip(batch, columns):
+        self._g_ewma.set(self._solve_s[fingerprint])
+        self._c_requests.inc(len(batch))
+        self._c_batches.inc()
+        self._h_solve_ms.observe(solve_ms)
+        self._h_batch_size.observe(len(batch))
+        tracer = self.tracer
+        if tracer is not None:
+            # one span per batch on the server track, plus the back-filled
+            # per-request queue + solve spans — each request's track shows
+            # its whole enqueue → dispatch → result timeline
+            tracer.span_at(
+                "batch", t_dispatch, t_done, trace_id=SERVER_TRACK,
+                cat="server", fingerprint=fingerprint,
+                batch_size=len(batch), reason=reason,
+                priority=priority.name.lower(),
+            )
+        for i, (pending, col) in enumerate(zip(batch, columns)):
+            queue_ms = (t_dispatch - pending.t_enqueue) * 1e3
+            self._h_queue_ms.observe(queue_ms)
+            if tracer is not None:
+                tracer.span_at(
+                    "queue", pending.t_enqueue, t_dispatch,
+                    trace_id=pending.trace_id, cat="request",
+                    priority=pending.options.priority.name.lower(),
+                )
+                tracer.span_at(
+                    "solve", t_dispatch, t_done,
+                    trace_id=pending.trace_id, cat="request",
+                    fingerprint=fingerprint, column=i,
+                    batch_size=len(batch),
+                    iterations=int(col.iterations),
+                    converged=bool(col.converged),
+                )
             if pending.future.done():  # caller went away (cancelled)
                 continue
             pending.future.set_result(
@@ -603,7 +805,7 @@ class SolveServer:
                     **{f.name: getattr(col, f.name)
                        for f in dataclasses.fields(col)},
                     batch_size=len(batch),
-                    queue_ms=(t_dispatch - pending.t_enqueue) * 1e3,
+                    queue_ms=queue_ms,
                     solve_ms=solve_ms,
                 )
             )
@@ -658,17 +860,31 @@ class ServerSession:
 
         ``options`` carries the same typed surface as ``submit`` (priority,
         deadline, tolerance); the stream's prediction rides its ``x0`` slot
-        unless the caller pinned an explicit warm start there."""
+        unless the caller pinned an explicit warm start there. With the
+        server tracing, the update's ``session.update`` span shares the
+        request's trace id, so the prediction overhead and the carried
+        solve render on one track."""
         b = np.asarray(b)
         options = options or SubmitOptions()
+        tracer = self.server.tracer
+        trace_id = tracer.new_trace_id() if tracer is not None else None
+        t0 = self.server.clock.now()
         if options.x0 is None:
             x0 = self._predictor.predict(b)
             if x0 is not None:
                 options = dataclasses.replace(options, x0=x0)
-        res = await self.server._enqueue(self.fingerprint, b, options)
+        res = await self.server._enqueue(
+            self.fingerprint, b, options, trace_id=trace_id
+        )
         self._predictor.observe(b, res.x)
         self._updates += 1
         self._total_iterations += int(res.iterations)
+        if tracer is not None:
+            tracer.span_at(
+                "session.update", t0, self.server.clock.now(),
+                trace_id=trace_id, cat="session",
+                update=self._updates, warm=options.x0 is not None,
+            )
         return res
 
 

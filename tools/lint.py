@@ -54,6 +54,48 @@ def _unused_imports(tree: ast.AST, source: str) -> list[tuple[int, str]]:
     return out
 
 
+def banned_wall_clock(tree: ast.AST) -> list[tuple[int, str]]:
+    """``time.time()`` / ``time.perf_counter()`` call sites — the serving
+    layer must read the injectable ``repro.obs.clock`` instead, or latency
+    accounting silently mixes clocks again (the bug this repo-local rule
+    exists to keep fixed; ruff has no such check)."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if (
+            isinstance(fn, ast.Attribute)
+            and isinstance(fn.value, ast.Name)
+            and fn.value.id == "time"
+            and fn.attr in ("time", "perf_counter", "monotonic")
+        ):
+            out.append((node.lineno, f"time.{fn.attr}"))
+    return out
+
+
+def run_clock_ban() -> int:
+    """Always-on repo rule (runs with AND without ruff): no direct
+    wall-clock reads under ``src/repro/serving/``."""
+    failures = 0
+    for path in sorted((ROOT / "src" / "repro" / "serving").rglob("*.py")):
+        rel = path.relative_to(ROOT)
+        source = path.read_text()
+        try:
+            tree = ast.parse(source, filename=str(rel))
+        except SyntaxError:
+            continue  # the general pass reports syntax errors
+        for lineno, name in banned_wall_clock(tree):
+            if "noqa" in source.splitlines()[lineno - 1]:
+                continue
+            print(
+                f"{rel}:{lineno}: {name}() in the serving layer — use the "
+                f"injectable repro.obs.clock (server/pool `clock`) instead"
+            )
+            failures += 1
+    return failures
+
+
 def run_fallback() -> int:
     failures = 0
     for target in TARGETS:
@@ -79,10 +121,11 @@ def run_fallback() -> int:
 
 
 def main() -> int:
+    clock_failures = run_clock_ban()
     if shutil.which("ruff"):
-        return run_ruff()
+        return run_ruff() or (1 if clock_failures else 0)
     print("ruff not installed; running built-in fallback lint", file=sys.stderr)
-    return run_fallback()
+    return run_fallback() or (1 if clock_failures else 0)
 
 
 if __name__ == "__main__":
