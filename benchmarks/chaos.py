@@ -1,0 +1,309 @@
+"""Chaos gate: the Poisson serving trace replayed under a committed fault
+plan (ISSUE 9 tentpole, part 4).
+
+Three runs of the same serving workload:
+
+  * baseline — fault hooks off (``faults=None, watchdog=None``), the PR 8
+    fast path, replaying a seeded Poisson arrival trace;
+  * chaos    — the SAME trace with ``benchmarks/chaos_plan.json`` armed: a
+    transient solve error (recovers by retry), a persistent error poison
+    (bisected out of its batches, then ``SolveFailure``), transient +
+    persistent NaN columns and a transient stall (watchdog-flagged, ladder
+    recovery / structured failure), and a probabilistic latency rule;
+  * hardened burst — a saturating burst with the fault machinery ARMED but
+    the plan EMPTY, against the same burst with hooks off: the price of
+    carrying the watchdog + injector on the healthy path.
+
+Acceptance gates (ISSUE 9, asserted in-run so CI fails loudly):
+
+  * zero lost or wedged futures: every request resolves — a result or a
+    structured ``SolveFailure`` — within the replay timeout;
+  * exactly the plan's ``poisoned_requests`` fail; every other request
+    returns ITS OWN solution, finite and correct;
+  * chaos goodput on non-poisoned requests >= 0.9x the fault-free replay;
+  * hardened fault-free-path overhead <= 1.05x, and the hardened burst's
+    solutions are bit-identical to the unhooked server's.
+
+Emits ``BENCH_chaos.json``. Standalone:
+
+    PYTHONPATH=src python benchmarks/chaos.py --quick
+"""
+from __future__ import annotations
+
+import asyncio
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:  # standalone `python benchmarks/chaos.py`
+        sys.path.insert(0, _p)
+
+from repro.core.guard import Watchdog  # noqa: E402
+from repro.serving.faults import (  # noqa: E402
+    FaultInjector,
+    FaultPlan,
+    SolveFailure,
+)
+from repro.serving.queue import SolveServer  # noqa: E402
+from repro.sparse import make_problem  # noqa: E402
+
+PLAN_PATH = pathlib.Path(__file__).with_name("chaos_plan.json")
+MAX_BATCH = 8
+NUM_REQUESTS = 48  # fixed in both modes: the plan targets absolute seqs
+WARMUP = 2  # warm-up submits before the measured trace (seqs 0..WARMUP-1)
+PREP_KW = dict(num_blocks=8, materialize_p=False)
+
+
+def _server(problem, epochs: int, hardened: bool, plan: FaultPlan | None):
+    faults = (
+        FaultInjector(plan or FaultPlan()) if (hardened or plan) else None
+    )
+    return SolveServer(
+        max_batch=MAX_BATCH, max_wait_ms=5.0, num_epochs=epochs, tol=1e-3,
+        prepare_kwargs=dict(PREP_KW),
+        faults=faults,
+        watchdog=Watchdog() if (hardened or plan) else None,
+        backoff_base_ms=1.0,  # ladder pacing, scaled to ms-sized solves
+    )
+
+
+async def _replay(server, fp, rhs, gaps):
+    """Replay the arrival trace; every submit resolves to ``(result, None)``
+    or ``(None, SolveFailure)`` — anything else is a lost future."""
+
+    async def client(i, at):
+        await asyncio.sleep(at)
+        try:
+            return await server.submit(fp, rhs[:, i]), None
+        except SolveFailure as e:
+            return None, e
+
+    arrival, tasks = 0.0, []
+    for i, gap in enumerate(gaps):
+        arrival += float(gap)
+        tasks.append(asyncio.create_task(client(i, arrival)))
+    t0 = time.perf_counter()
+    try:  # a wedged future fails the gate loudly instead of hanging CI
+        out = await asyncio.wait_for(asyncio.gather(*tasks), timeout=300.0)
+    except asyncio.TimeoutError:
+        raise AssertionError(
+            "wedged futures: the replay did not resolve every request"
+        ) from None
+    return out, time.perf_counter() - t0
+
+
+async def _traced_run(problem, rhs, gaps, epochs, plan):
+    """One full serving run: warm-up, then the measured Poisson replay.
+    The fault plan (if any) is armed only after warm-up, and the measured
+    requests carry seqs ``WARMUP..WARMUP+k-1`` — the absolute ids the
+    committed plan targets."""
+    async with _server(problem, epochs, hardened=False, plan=None) as server:
+        fp = server.register(problem.A)
+        for _ in range(WARMUP):
+            await server.submit(fp, rhs[:, 0])
+        assert server.next_request_seq == WARMUP
+        if plan is not None:
+            injector = FaultInjector(plan)
+            server.faults = server.pool.faults = injector
+            server.watchdog = Watchdog()
+        server.reset_stats()
+        out, wall = await _replay(server, fp, rhs, gaps)
+        return out, wall, server.stats()
+
+
+async def _burst(problem, rhs, epochs, hardened):
+    async with _server(
+        problem, epochs, hardened=hardened, plan=None
+    ) as server:
+        fp = server.register(problem.A)
+        await server.submit(fp, rhs[:, 0])  # compile + pool warm-up
+        server.reset_stats()
+        t0 = time.perf_counter()
+        results = await asyncio.gather(
+            *(server.submit(fp, rhs[:, i]) for i in range(rhs.shape[1]))
+        )
+        wall = time.perf_counter() - t0
+        return [np.asarray(r.x) for r in results], wall
+
+
+def run(quick: bool = False):
+    epochs = 60 if quick else 100
+    n, m = 96, 384
+    problem = make_problem(n=n, m=m, seed=3, dtype=np.float32)
+    rng = np.random.default_rng(2306)
+    xs = rng.standard_normal((n, NUM_REQUESTS)).astype(np.float32)
+    rhs = problem.A @ xs
+
+    plan = FaultPlan.load(PLAN_PATH)
+    poisoned = plan.poisoned_requests
+    assert poisoned, "committed chaos plan has no poison rules"
+
+    # calibrate the arrival rate off one measured batch: ~6 batch-times of
+    # mean inter-arrival keeps the server at low utilization, so recovery
+    # work (bisection redispatches, ladder retries) absorbs idle capacity
+    # instead of displacing goodput — the regime the 0.9x gate describes
+    async def _batch_time():
+        async with _server(
+            problem, epochs, hardened=False, plan=None
+        ) as server:
+            fp = server.register(problem.A)
+            await server.submit(fp, rhs[:, 0])
+            t0 = time.perf_counter()
+            await server.submit(fp, rhs[:, 0])
+            return time.perf_counter() - t0
+
+    batch_s = asyncio.run(_batch_time())
+    gap_mean = max(6.0 * batch_s, 2e-3)
+    gaps = rng.exponential(gap_mean, size=NUM_REQUESTS)
+    gaps[0] = 0.0
+    trace_s = float(gaps.sum())
+
+    # --- baseline vs chaos: the same trace, fault plan armed ---------------
+    base_out, base_wall, base_stats = asyncio.run(
+        _traced_run(problem, rhs, gaps, epochs, plan=None)
+    )
+    chaos_out, chaos_wall, chaos_stats = asyncio.run(
+        _traced_run(problem, rhs, gaps, epochs, plan=plan)
+    )
+
+    # zero lost futures: every request resolved, one way or the other
+    assert len(base_out) == NUM_REQUESTS and len(chaos_out) == NUM_REQUESTS
+    assert all(r is not None for r, _ in base_out), "baseline lost futures"
+
+    failed_seqs = {
+        e.request for _, e in chaos_out if e is not None
+    }
+    # ONLY the plan's poisoned requests fail, and they fail structurally
+    assert failed_seqs == poisoned, (
+        f"failed requests {sorted(failed_seqs)} != "
+        f"poisoned plan targets {sorted(poisoned)}"
+    )
+    for i, (res, exc) in enumerate(chaos_out):
+        seq = WARMUP + i
+        if seq in poisoned:
+            assert res is None and isinstance(exc, SolveFailure)
+            assert exc.attempts >= 2  # the ladder genuinely ran
+        else:
+            assert exc is None
+            x = np.asarray(res.x)
+            assert np.isfinite(x).all(), f"request {seq}: non-finite result"
+            np.testing.assert_allclose(
+                x, xs[:, i], atol=1e-3,
+                err_msg=f"request {seq}: wrong solution under chaos",
+            )
+    # the transient nan + stall recover through the ladder; the transient
+    # error recovers via bisection (visible in retries, not recovered)
+    assert chaos_stats["recovered_requests"] >= 2
+    assert chaos_stats["retries"] >= 1
+    assert chaos_stats["failed_requests"] == len(poisoned)
+
+    # goodput on NON-poisoned requests: >= 0.9x the fault-free replay
+    n_good = NUM_REQUESTS - len(poisoned)
+    goodput_base = n_good / base_wall
+    goodput_chaos = n_good / chaos_wall
+    goodput_ratio = goodput_chaos / goodput_base
+    assert goodput_ratio >= 0.9, (
+        f"chaos goodput {goodput_ratio:.2f}x fault-free (gate >=0.9x): "
+        f"{goodput_chaos:.1f} vs {goodput_base:.1f} req/s"
+    )
+
+    # --- hardened fast path: armed-but-idle hooks vs no hooks --------------
+    k_burst = 64 if quick else 96
+    xb = rng.standard_normal((n, k_burst)).astype(np.float32)
+    rhs_burst = problem.A @ xb
+    plain_x = hard_x = None
+    plain_wall = hard_wall = float("inf")
+    for _ in range(3):  # best-of: the gate is 5%, CI timing is not
+        px, pw = asyncio.run(_burst(problem, rhs_burst, epochs, False))
+        hx, hw = asyncio.run(_burst(problem, rhs_burst, epochs, True))
+        if pw < plain_wall:
+            plain_x, plain_wall = px, pw
+        if hw < hard_wall:
+            hard_x, hard_wall = hx, hw
+    overhead = hard_wall / plain_wall
+    assert overhead <= 1.05, (
+        f"fault-free-path overhead {overhead:.3f}x with hooks armed "
+        f"(gate <=1.05x)"
+    )
+    # the hooks must not perturb the solve: bit-identical solutions
+    bit_identical = all(
+        np.array_equal(p, h) for p, h in zip(plain_x, hard_x)
+    )
+    assert bit_identical, "armed (idle) fault hooks perturbed the solve"
+
+    fired = chaos_stats["failures"]
+    rows = [
+        {
+            "name": f"chaos/baseline_poisson_{NUM_REQUESTS}x_{m}x{n}",
+            "us_per_call": base_wall / NUM_REQUESTS * 1e6,
+            "derived": (
+                f"wall={base_wall:.3f}s trace={trace_s:.3f}s "
+                f"batches={base_stats['batches']} "
+                f"goodput={goodput_base:.1f}req/s"
+            ),
+        },
+        {
+            "name": f"chaos/faulted_poisson_{NUM_REQUESTS}x_{m}x{n}",
+            "us_per_call": chaos_wall / NUM_REQUESTS * 1e6,
+            "gated": True,
+            "derived": (
+                f"wall={chaos_wall:.3f}s failures={fired} "
+                f"retries={chaos_stats['retries']} "
+                f"recovered={chaos_stats['recovered_requests']} "
+                f"failed={chaos_stats['failed_requests']} "
+                f"goodput_ratio={goodput_ratio:.2f}x (gate >=0.9x)"
+            ),
+        },
+        {
+            "name": f"chaos/hardened_burst_{k_burst}x_{m}x{n}",
+            "us_per_call": hard_wall / k_burst * 1e6,
+            "derived": (
+                f"plain={plain_wall:.3f}s hardened={hard_wall:.3f}s "
+                f"overhead={overhead:.3f}x (gate <=1.05x) "
+                f"bit_identical={bit_identical}"
+            ),
+        },
+    ]
+    checks = {
+        "requests": NUM_REQUESTS,
+        "poisoned_requests": sorted(poisoned),
+        "failed_requests": sorted(failed_seqs),
+        "recovered_requests": chaos_stats["recovered_requests"],
+        "goodput_ratio": goodput_ratio,
+        "hardened_overhead": overhead,
+        "hardened_bit_identical": bit_identical,
+        "chaos_retries": chaos_stats["retries"],
+        "chaos_failures": fired,
+    }
+    return rows, checks
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    rows, checks = run(quick=args.quick)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+
+    from benchmarks.record import write_record
+
+    path = write_record("chaos", rows, checks, quick=args.quick)
+    print(f"wrote {path}")
+    print(
+        f"acceptance: failed=={checks['poisoned_requests']} only, "
+        f"goodput_ratio={checks['goodput_ratio']:.2f}x (need >=0.9x), "
+        f"overhead={checks['hardened_overhead']:.3f}x (need <=1.05x) -> PASS"
+    )
+
+
+if __name__ == "__main__":
+    main()

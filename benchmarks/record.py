@@ -136,7 +136,8 @@ def main() -> None:
         help="directory holding the freshly produced records",
     )
     ap.add_argument(
-        "--sections", default="sparse,kernels,sparse_sharded,streaming,serving_qos",
+        "--sections",
+        default="sparse,kernels,sparse_sharded,streaming,serving_qos,chaos",
         help="comma-separated section names to compare",
     )
     ap.add_argument("--max-regression", type=float, default=0.25)

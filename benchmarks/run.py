@@ -58,6 +58,7 @@ def main() -> None:
         ap.error("--repeat must be >= 1")
 
     from benchmarks import (
+        chaos,
         convergence,
         kernels,
         multirhs,
@@ -84,6 +85,7 @@ def main() -> None:
         "sparse": lambda: sparse.run(quick=args.quick),
         "sparse_sharded": lambda: sparse_sharded.run(quick=args.quick),
         "streaming": lambda: streaming.run(quick=args.quick),
+        "chaos": lambda: chaos.run(quick=args.quick),
     }
     if args.only:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

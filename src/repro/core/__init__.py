@@ -29,6 +29,7 @@ from repro.core.dapc import (
 )
 from repro.core.dgd import solve_dgd
 from repro.core.cg import solve_cgnr
+from repro.core.guard import SolveHealth, Watchdog
 from repro.core.consensus import run_consensus, tune_hyperparams, block_residual_sq
 
 __all__ = [
@@ -59,6 +60,8 @@ __all__ = [
     "initial_from_factors",
     "solve_dgd",
     "solve_cgnr",
+    "SolveHealth",
+    "Watchdog",
     "run_consensus",
     "tune_hyperparams",
     "block_residual_sq",

@@ -271,6 +271,17 @@ class SolveResult:
             for i in range(x.shape[1])
         ]
 
+    def assess_health(self, tol: float | None = None, watchdog=None):
+        """Per-column NaN/stall verdict (``repro.core.guard.SolveHealth``).
+
+        Host-side only: reads the residual history this result already
+        carries — assessing (or not) never changes the solve program, so
+        guarded and un-guarded solves are bit-identical.
+        """
+        from repro.core.guard import assess
+
+        return assess(self, tol=tol, watchdog=watchdog)
+
 
 def _as_warm_operand(x0, dtype):
     """Normalize a solve-time ``x0`` warm start to device operands.

@@ -76,6 +76,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="[drifting] per-component drift amplitude of the "
                          "underlying solution between updates")
     ap.add_argument("--seed", type=int, default=0)
+    ft = ap.add_argument_group("fault tolerance (repro.serving.faults)")
+    ft.add_argument("--fault-plan", default=None, metavar="FILE",
+                    help="arm a deterministic fault plan (JSON with seed + "
+                         "rules, see FaultPlan) against the replay: injected "
+                         "prepare/solve/checkpoint faults exercise the "
+                         "containment ladder (retry -> fallback -> fresh "
+                         "prepare); also arms the divergence watchdog and "
+                         "prints a failure summary after the trace "
+                         "(poisson trace only)")
+    ft.add_argument("--watchdog", action="store_true",
+                    help="arm the NaN/stall divergence watchdog on served "
+                         "solves even without an injected fault plan")
     obs = ap.add_argument_group("observability (repro.obs)")
     obs.add_argument("--trace-out", default=None, metavar="FILE",
                      help="record request spans and write a Chrome "
@@ -172,6 +184,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if args.mode == "matfree" and args.method not in ("apc", "dapc"):
         ap.error("--mode matfree supports the consensus methods (apc/dapc)")
+    if args.fault_plan and args.trace == "drifting":
+        ap.error("--fault-plan replays the poisson trace; session streams "
+                 "have no per-request failure slots")
     if args.mesh:
         if args.mode != "matfree":
             ap.error("--mesh shards the matfree path; pass --mode matfree")
@@ -207,6 +222,21 @@ def main(argv=None) -> None:
         print(f"metrics: serving Prometheus exposition on "
               f"http://{host}:{port}/metrics")
 
+    faults = None
+    if args.fault_plan:
+        from repro.serving.faults import FaultInjector, FaultPlan
+
+        plan = FaultPlan.load(args.fault_plan)
+        faults = FaultInjector(plan)
+        print(f"fault plan: {args.fault_plan} armed "
+              f"({len(plan.rules)} rules, seed {plan.seed}, "
+              f"poisoned requests {sorted(plan.poisoned_requests)})")
+    watchdog = None
+    if args.watchdog or faults is not None:
+        from repro.core.guard import Watchdog
+
+        watchdog = Watchdog()
+
     server_kwargs = dict(
         max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms,
@@ -225,6 +255,8 @@ def main(argv=None) -> None:
             {"solve_kwargs": {"block_history": True}}
             if args.block_history else {}
         ),
+        **({"faults": faults} if faults is not None else {}),
+        **({"watchdog": watchdog} if watchdog is not None else {}),
     )
     # register the sparse COO for square systems (the matfree path then
     # never densifies); augmented systems are dense by nature
@@ -261,12 +293,19 @@ def _run_replay(args, prob, system, server_kwargs, rng, tracer) -> None:
     gaps = rng.exponential(1.0 / args.rate, size=args.requests)
     gaps[0] = 0.0  # first request fires immediately
 
+    faulted = server_kwargs.get("faults") is not None
+
     async def serve():
         async with SolveServer(**server_kwargs) as server:
             fp = server.register(system)
             # warm the compiled programs so the trace measures steady state
             await server.submit(fp, rhs[:, 0])
             server.reset_stats()  # report the trace, not the warm-up
+            if faulted:
+                # fault-plan `request` ids are absolute seqs; the warm-up
+                # consumed some, so tell plan authors where the trace starts
+                print(f"fault plan: trace request i is seq "
+                      f"{server.next_request_seq} + i")
             if tracer is not None:
                 tracer.clear()  # export the measured trace only
 
@@ -285,7 +324,9 @@ def _run_replay(args, prob, system, server_kwargs, rng, tracer) -> None:
 
                 ticker = asyncio.create_task(tick())
             t0 = time.perf_counter()
-            results = await replay_trace(server, fp, rhs, gaps)
+            results = await replay_trace(
+                server, fp, rhs, gaps, return_exceptions=faulted
+            )
             wall = time.perf_counter() - t0
             if ticker is not None:
                 ticker.cancel()
@@ -301,17 +342,28 @@ def _run_replay(args, prob, system, server_kwargs, rng, tracer) -> None:
                     num_epochs=args.epochs, block_history=True,
                 )
                 report = convergence_report(diag, tol=args.tol)
-            return (server.stats(), results, wall,
-                    server.pool.resident(), report)
+            stats = server.stats()
+            # watchdog verdicts land in the by-reason failure counter
+            stats["watchdog_flags"] = int(
+                server.metrics.value("server_failures_total", reason="nan")
+                + server.metrics.value(
+                    "server_failures_total", reason="stalled"
+                )
+            )
+            return stats, results, wall, server.pool.resident(), report
 
     stats, results, wall, resident, report = asyncio.run(serve())
 
-    lat_ms = np.array([r.queue_ms + r.solve_ms for r in results])
-    err = max(
-        float(np.abs(r.x - xs[:, i]).max()) for i, r in enumerate(results)
-    )
-    sizes = Counter(r.batch_size for r in results)
-    unconverged = sum(not r.converged for r in results)
+    # under a fault plan, slot i may hold the structured failure instead of
+    # a result — split, report the survivors, then summarize the failures
+    failed = [(i, r) for i, r in enumerate(results) if isinstance(r, Exception)]
+    ok = [(i, r) for i, r in enumerate(results) if not isinstance(r, Exception)]
+    if not ok:
+        raise SystemExit("every request failed — nothing to report")
+    lat_ms = np.array([r.queue_ms + r.solve_ms for _, r in ok])
+    err = max(float(np.abs(r.x - xs[:, i]).max()) for i, r in ok)
+    sizes = Counter(r.batch_size for _, r in ok)
+    unconverged = sum(not r.converged for _, r in ok)
 
     print(
         f"system {args.m}x{args.n} method={args.method} "
@@ -344,6 +396,21 @@ def _run_replay(args, prob, system, server_kwargs, rng, tracer) -> None:
         f"accuracy: max|x - x_true| = {err:.2e}; "
         f"unconverged columns (tol={args.tol:g}): {unconverged}"
     )
+    if args.fault_plan:
+        from repro.serving.faults import SolveFailure
+
+        print(
+            f"faults: {len(failed)}/{args.requests} requests failed, "
+            f"{stats.get('recovered_requests', 0)} recovered after faults, "
+            f"{int(stats.get('retries', 0))} recovery dispatches, "
+            f"watchdog flags={stats.get('watchdog_flags', 0)}"
+        )
+        for i, f in failed:
+            if isinstance(f, SolveFailure):
+                print(f"  request {i}: FAILED reason={f.reason} "
+                      f"attempts={f.attempts} (seq {f.request})")
+            else:
+                print(f"  request {i}: FAILED {type(f).__name__}: {f}")
     for entry in resident:  # which execution path each pooled system used
         print(
             f"pool: system {entry['fingerprint']} path={entry['path']} "

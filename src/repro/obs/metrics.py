@@ -217,6 +217,19 @@ class MetricsRegistry:
                 return 0.0
         return _Series(metric, key, state).value
 
+    def total(self, name: str) -> float:
+        """One family's value summed across ALL of its label series (the
+        Prometheus ``sum(name)`` aggregate; 0.0 for absent families) —
+        what a labeled counter reads as when the caller doesn't care which
+        label bucket the increments landed in."""
+        metric = self.get(name)
+        if metric is None:
+            return 0.0
+        return sum(
+            state.get("sum", state.get("value", 0.0))
+            for _, state in metric.collect()
+        )
+
     def render(self) -> str:
         """The Prometheus text exposition of every registered family."""
         lines: list[str] = []

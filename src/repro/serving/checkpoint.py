@@ -12,9 +12,10 @@ a save to make progress, so every load failure silently degrades to a fresh
 One ``<fingerprint>.npz`` per system: the solver's ``to_state()`` arrays
 plus one ``__meta__`` JSON string (stored as a 0-d unicode array — loadable
 with ``allow_pickle=False``, so a corrupt or hostile file can at worst fail
-to parse). Writes go through a temp file + ``os.replace`` so readers never
-observe a half-written checkpoint, and a crashed writer leaves the previous
-checkpoint intact.
+to parse). Writes go through a UNIQUE per-writer temp file + ``os.replace``
+so readers never observe a half-written checkpoint, concurrent writers
+(multi-process serving) never tear each other's temp file, and a crashed
+writer leaves the previous checkpoint intact.
 
 Load validates before trusting: format version, solver path, and a
 ``prepare_key`` digest of the prepare kwargs that built the saved state — a
@@ -23,12 +24,26 @@ count, dtype, ...) MUST miss, because the pool would otherwise serve factors
 that disagree with its registration. Mesh-backed (sharded) solvers are not
 checkpointed: device placement does not serialize, and re-placing restored
 host arrays is exactly what ``prepare`` already does.
+
+Corrupt/unparseable files are *quarantined* on the miss: the store renames
+``<fp>.npz`` to ``<fp>.npz.bad`` (keeping the evidence for forensics)
+instead of re-reading and re-failing the same bytes on every future pool
+miss — without this, an LRU-thrashing pool pays a doomed ``np.load`` of a
+truncated file per miss, forever. A *valid* checkpoint that merely
+mismatches (older format version, different ``prepare_key``) is left in
+place: it belongs to a different, legitimate configuration.
+
+``faults=`` threads a ``repro.serving.faults.FaultInjector`` (zero-cost
+when ``None``): injection can damage the file right before a load or fail
+a save, which is how the chaos tests prove the quarantine + best-effort
+paths for real.
 """
 from __future__ import annotations
 
 import json
 import os
 import pathlib
+import tempfile
 
 import numpy as np
 
@@ -66,17 +81,21 @@ class CheckpointStore:
 
     ``save`` is best-effort (returns False for unsupported solvers);
     ``load`` is restore-only robust (returns None on ANY mismatch or
-    corruption — the caller falls back to ``prepare``). Counters
-    (``saves``/``loads``/``load_misses``) are observability only; the
-    pool's ``PoolStats`` tracks the serving-level restore metrics.
+    corruption — the caller falls back to ``prepare``; corrupt files are
+    quarantined to ``.npz.bad`` so they fail at most once). Counters
+    (``saves``/``loads``/``load_misses``/``quarantined``) are
+    observability only; the pool's ``PoolStats`` tracks the serving-level
+    restore metrics.
     """
 
-    def __init__(self, directory: str | os.PathLike):
+    def __init__(self, directory: str | os.PathLike, faults=None):
         self.directory = pathlib.Path(directory)
         self.directory.mkdir(parents=True, exist_ok=True)
+        self.faults = faults  # FaultInjector | None (None = zero cost)
         self.saves = 0
         self.loads = 0
         self.load_misses = 0
+        self.quarantined = 0
 
     def path(self, fingerprint: str) -> pathlib.Path:
         return self.directory / f"{fingerprint}.npz"
@@ -101,28 +120,55 @@ class CheckpointStore:
             **meta,
         }
         target = self.path(fingerprint)
-        tmp = target.with_name(target.name + ".tmp")
+        tmp = None
         try:
-            with open(tmp, "wb") as f:
+            if self.faults is not None:
+                self.faults.on_checkpoint_save(fingerprint)
+            # unique temp name per writer: concurrent saves of the same
+            # fingerprint each build their own complete file, and whichever
+            # replace lands last wins — never a torn byte range
+            fd, tmp = tempfile.mkstemp(
+                prefix=target.name + ".", suffix=".tmp", dir=self.directory
+            )
+            with os.fdopen(fd, "wb") as f:
                 np.savez(f, __meta__=np.array(json.dumps(meta)), **arrays)
             os.replace(tmp, target)  # atomic: readers see old or new, whole
         except OSError:
-            tmp.unlink(missing_ok=True)
+            if tmp is not None:
+                pathlib.Path(tmp).unlink(missing_ok=True)
             return False
         self.saves += 1
         return True
+
+    def quarantine(self, fingerprint: str) -> pathlib.Path | None:
+        """Move a damaged checkpoint aside as ``<fp>.npz.bad`` (evidence
+        preserved, never re-read); returns the new path, or None if the
+        rename failed (another process may have raced us to it)."""
+        target = self.path(fingerprint)
+        bad = target.with_name(target.name + ".bad")
+        try:
+            os.replace(target, bad)
+        except OSError:
+            return None
+        self.quarantined += 1
+        return bad
 
     def load(self, fingerprint: str, prepare_kwargs: dict):
         """Restore the prepared solver for ``fingerprint``, or None.
 
         None on: no checkpoint, placement kwargs demanding a mesh, format
         or ``prepare_key`` mismatch, or a corrupt/unreadable file — every
-        path the pool can recover from by preparing fresh.
+        path the pool can recover from by preparing fresh. Corruption
+        additionally quarantines the file (see class docstring);
+        mismatches do not, because the bytes are a valid checkpoint for a
+        different configuration.
         """
         if prepare_kwargs.get("mesh") is not None:
             return None
         target = self.path(fingerprint)
         try:
+            if self.faults is not None:
+                self.faults.on_checkpoint_load(fingerprint, target)
             with np.load(target, allow_pickle=False) as z:
                 meta = json.loads(str(z["__meta__"][()]))
                 if meta.get("format") != FORMAT_VERSION:
@@ -139,8 +185,14 @@ class CheckpointStore:
             prep = cls.from_state(arrays, meta)
         except FileNotFoundError:
             return None
-        except Exception:  # corrupt/truncated/foreign file: restore-only
+        except OSError:  # transient IO failure: miss, but the bytes may
+            # be fine — do not quarantine on a read error
             self.load_misses += 1
+            return None
+        except Exception:  # corrupt/truncated/foreign file: restore-only,
+            # and quarantined so the SAME bytes never fail a second miss
+            self.load_misses += 1
+            self.quarantine(fingerprint)
             return None
         self.loads += 1
         return prep

@@ -62,12 +62,24 @@ class SubmitOptions:
     with different tolerances never share a batch — see ``batch_key``);
     ``x0`` warm-starts this request's column (sessions attach their
     prediction here; per-column, so it never splits a batch).
+
+    ``max_retries``/``timeout_ms`` steer the fault-containment ladder
+    (``repro.serving.queue``): how many plain retries a failing request
+    gets before escalating to fallback re-prepare, and the total wall
+    budget (enqueue → resolution, measured on the server's injected
+    clock) after which containment stops and the future fails with a
+    structured ``SolveFailure("timeout")``. Both are recovery-scheduling
+    knobs, not solve parameters, so — like ``priority`` — they never
+    split a batch (they are not on ``SolveOptions``, and the derived
+    ``batch_key`` therefore excludes them).
     """
 
     priority: Priority = Priority.BULK
     deadline_ms: float | None = None
     tol: float | None = None
     x0: Any = None
+    max_retries: int = 1
+    timeout_ms: float | None = None
 
     @classmethod
     def field_names(cls) -> tuple[str, ...]:

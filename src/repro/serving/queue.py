@@ -32,6 +32,17 @@ Solves run on a single worker thread via ``run_in_executor`` so the event
 loop keeps accepting arrivals while a batch is on the accelerator; jax
 dispatch is not re-entrant-friendly and the single worker serializes it.
 
+Fault tolerance (``repro.serving.faults`` + ``repro.core.guard``): a batch
+failure no longer scatters to every batchmate — the dispatcher bisects to
+isolate the poison request, a host-side ``Watchdog`` flags NaN/stalled
+columns from the residual history the solve already emits, and flagged or
+failing requests climb a deterministic containment ladder (retry with
+exponential backoff on the injected clock → fallback re-prepare →
+checkpoint-bypassing fresh prepare → structured ``SolveFailure`` on just
+the offending future), guarded by a per-system circuit breaker. A seeded
+``FaultInjector`` (``faults=``) drives all of it deterministically in
+tests and ``benchmarks/chaos.py``; both hooks are zero-cost when ``None``.
+
 Observability (``repro.obs``): every counter in this module lives in a
 ``MetricsRegistry`` — ``stats()`` is a dict view over it, ``render_metrics``
 the Prometheus text form — and latency accounting reads ONE injectable
@@ -54,12 +65,18 @@ from typing import Any
 import numpy as np
 
 from repro.core import prepare
+from repro.core.guard import STATUS_OK, Watchdog
 from repro.core.prepared import ColumnResult, PreparedSolver
 from repro.core.session import SESSION_METHODS, DriftPredictor
 from repro.obs import clock as obs_clock
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import SERVER_TRACK, Tracer
 from repro.serving.checkpoint import CheckpointStore
+from repro.serving.faults import (
+    FaultInjector,  # noqa: F401  (re-exported: the server's faults= hook)
+    InjectedFault,
+    SolveFailure,
+)
 from repro.serving.policy import (
     AdmissionError,  # noqa: F401  (re-exported: raised by submit)
     BatchPolicy,
@@ -144,17 +161,19 @@ class PreparedPool:
         metrics: MetricsRegistry | None = None,
         clock=None,
         tracer: Tracer | None = None,
+        faults=None,
         **prepare_kwargs,
     ):
         if max_size < 1:
             raise ValueError(f"max_size must be >= 1, got {max_size}")
         self.max_size = max_size
         if checkpoint is not None and not isinstance(checkpoint, CheckpointStore):
-            checkpoint = CheckpointStore(checkpoint)
+            checkpoint = CheckpointStore(checkpoint, faults=faults)
         self.checkpoint = checkpoint
         self.metrics = metrics or MetricsRegistry()
         self.clock = clock or obs_clock.DEFAULT
         self.tracer = tracer
+        self.faults = faults  # FaultInjector | None (None = zero cost)
         self.prepare_kwargs = dict(prepare_kwargs)
         self._systems: dict[str, tuple[np.ndarray, dict]] = {}
         self._lru: OrderedDict[str, PreparedSolver] = OrderedDict()
@@ -173,6 +192,14 @@ class PreparedPool:
         self._c_evictions = m.counter("pool_evictions_total", "LRU evictions")
         self._c_restore_ms = m.counter(
             "pool_restore_ms_total", "cumulative checkpoint restore time"
+        )
+        self._c_refreshes = m.counter(
+            "pool_refreshes_total",
+            "checkpoint-bypassing fresh prepares (recovery ladder)",
+        )
+        self._c_fallbacks = m.counter(
+            "pool_fallbacks_total",
+            "degraded-config re-prepares (recovery ladder)",
         )
 
     @property
@@ -245,6 +272,8 @@ class PreparedPool:
                     )
         if prep is None:
             t0 = self.clock.now()
+            if self.faults is not None:
+                self.faults.on_prepare(fingerprint)
             prep = prepare(A, **kwargs)
             if self.tracer is not None:
                 self.tracer.span_at(
@@ -264,6 +293,94 @@ class PreparedPool:
             while len(self._lru) > self.max_size:
                 self._lru.popitem(last=False)
                 self._c_evictions.inc()
+        return prep
+
+    # -- recovery re-prepares (the serving containment ladder) --------------
+
+    def refresh(self, fingerprint: str) -> PreparedSolver:
+        """Fresh ``prepare`` that BYPASSES the checkpoint store — the
+        recovery path for factors poisoned on disk or in the pool. The new
+        entry replaces the pooled one, and the write-through overwrites
+        whatever checkpoint the bad restore came from."""
+        with self._lock:
+            if fingerprint not in self._systems:
+                raise KeyError(
+                    f"unknown system {fingerprint!r}; call register(A) first"
+                )
+            A, kwargs = self._systems[fingerprint]
+        t0 = self.clock.now()
+        if self.faults is not None:
+            self.faults.on_prepare(fingerprint)
+        prep = prepare(A, **kwargs)
+        if self.tracer is not None:
+            self.tracer.span_at(
+                "pool.refresh", t0, self.clock.now(), cat="pool",
+                fingerprint=fingerprint,
+            )
+        if self.checkpoint is not None:
+            self.checkpoint.save(fingerprint, prep, kwargs)
+        with self._lock:
+            self._c_refreshes.inc()
+            self._lru[fingerprint] = prep
+            self._lru.move_to_end(fingerprint)
+        return prep
+
+    @staticmethod
+    def _fallback_kwargs(kwargs: dict) -> dict | None:
+        """The degraded-but-sturdier prepare config one rung down the
+        ladder, or None when no degrade applies: an iterative ``pcg``
+        Gram solver falls back to the ``direct`` pseudo-inverse, and a
+        matfree registration falls back to the dense QR path. Mesh-backed
+        registrations have no single-host fallback."""
+        if kwargs.get("mesh") is not None:
+            return None
+        if kwargs.get("gram_solver") == "pcg":
+            return {**kwargs, "gram_solver": "direct"}
+        if kwargs.get("mode") == "matfree":
+            return {**kwargs, "mode": "dense"}
+        return None
+
+    def has_fallback(self, fingerprint: str) -> bool:
+        with self._lock:
+            entry = self._systems.get(fingerprint)
+        return (
+            entry is not None and self._fallback_kwargs(entry[1]) is not None
+        )
+
+    def fallback(self, fingerprint: str) -> PreparedSolver:
+        """Re-prepare on the fallback config (``_fallback_kwargs``) and
+        make it THE pooled entry: once a system needed the sturdy path,
+        subsequent batches stay on it until a ``refresh``. Raises
+        ``RuntimeError`` when no fallback config applies."""
+        with self._lock:
+            if fingerprint not in self._systems:
+                raise KeyError(
+                    f"unknown system {fingerprint!r}; call register(A) first"
+                )
+            A, kwargs = self._systems[fingerprint]
+        fb = self._fallback_kwargs(kwargs)
+        if fb is None:
+            raise RuntimeError(
+                f"no fallback prepare config for system {fingerprint!r}"
+            )
+        if isinstance(A, COOMatrix) and fb.get("mode") == "dense":
+            A = A.to_dense()  # last-resort densify: sturdiness over memory
+        t0 = self.clock.now()
+        if self.faults is not None:
+            self.faults.on_prepare(fingerprint)
+        prep = prepare(A, **fb)
+        if self.tracer is not None:
+            self.tracer.span_at(
+                "pool.fallback", t0, self.clock.now(), cat="pool",
+                fingerprint=fingerprint, path=prep.path,
+            )
+        with self._lock:
+            self._c_fallbacks.inc()
+            self._systems[fingerprint] = (A, fb)
+            self._lru[fingerprint] = prep
+            self._lru.move_to_end(fingerprint)
+        if self.checkpoint is not None:
+            self.checkpoint.save(fingerprint, prep, fb)
         return prep
 
     def resident(self) -> list[dict]:
@@ -300,6 +417,7 @@ class RequestResult(ColumnResult):
     batch_size: int = 0  # how many requests shared the compiled program
     queue_ms: float = 0.0  # enqueue → batch dispatch
     solve_ms: float = 0.0  # batch dispatch → results ready (batch-shared)
+    attempts: int = 1  # solve dispatches this request rode (1 = first try)
 
     @property
     def column(self) -> int:
@@ -322,6 +440,11 @@ class ServerStats:
     interactive_batches: int = 0
     bulk_batches: int = 0
     admission_rejects: int = 0  # bulk submits refused by max_pending_bulk
+    failures: int = 0  # solve failures observed (batch-level + per-column)
+    retries: int = 0  # containment ladder attempts (retry/bisect/fallback/…)
+    recovered_requests: int = 0  # failed at least once, then succeeded
+    failed_requests: int = 0  # futures resolved with SolveFailure
+    cancelled: int = 0  # already-done (cancelled) requests dropped
 
     @property
     def mean_batch_size(self) -> float:
@@ -331,11 +454,11 @@ class ServerStats:
 class _Pending:
     __slots__ = (
         "b", "future", "t_enqueue", "options", "deadline_at", "batch_key",
-        "trace_id",
+        "trace_id", "seq",
     )
 
     def __init__(self, b, future, t_enqueue, options, deadline_at,
-                 trace_id=0):
+                 trace_id=0, seq=0):
         self.b = b
         self.future = future
         self.t_enqueue = t_enqueue
@@ -343,6 +466,7 @@ class _Pending:
         self.deadline_at = deadline_at  # absolute clock time, or None
         self.batch_key = batch_key(options)
         self.trace_id = trace_id  # 0 when tracing is off
+        self.seq = seq  # submit-order sequence number (fault-plan target)
 
 
 class _PendingQueue:
@@ -425,6 +549,12 @@ class SolveServer:
         metrics: MetricsRegistry | None = None,
         tracer: Tracer | None = None,
         clock=None,
+        faults=None,
+        watchdog: Watchdog | None = None,
+        backoff_base_ms: float = 10.0,
+        backoff_max_ms: float = 500.0,
+        breaker_threshold: int = 8,
+        breaker_cooldown_ms: float = 2000.0,
     ):
         """``bucket_pad=True`` pads a partial batch with zero columns up to
         ``max_batch`` so every dispatch reuses ONE compiled (m, max_batch)
@@ -441,7 +571,23 @@ class SolveServer:
         queue/solve spans and per-batch dispatch spans, and ``clock`` is
         THE monotonic time source for all latency accounting (defaults to
         the tracer's clock so spans and ``queue_ms`` agree, else the
-        process-wide ``repro.obs.clock.DEFAULT``)."""
+        process-wide ``repro.obs.clock.DEFAULT``).
+
+        ``faults``/``watchdog`` are the fault-tolerance hooks, both
+        zero-cost when ``None``: ``faults`` is a
+        ``repro.serving.faults.FaultInjector`` evaluated at the
+        prepare/solve/checkpoint sites (threaded into an internally-built
+        pool and store), and ``watchdog`` is a ``repro.core.guard.Watchdog``
+        that assesses every dispatched result host-side — unhealthy
+        (NaN/stalled) columns are NOT scattered; their requests enter the
+        containment ladder (retry with exponential backoff on the injected
+        clock → ``gram_solver``/path fallback re-prepare →
+        checkpoint-bypassing fresh prepare → structured ``SolveFailure`` on
+        just the offending futures). A whole-batch failure bisects to
+        isolate the poison request so innocent batchmates still succeed,
+        and ``breaker_threshold`` consecutive batch failures per system
+        open a circuit breaker that fast-fails new work for
+        ``breaker_cooldown_ms`` (half-open trial after the cooldown)."""
         self.policy = policy or BatchPolicy(
             max_batch=int(max_batch), max_wait_ms=float(max_wait_ms)
         )
@@ -452,9 +598,16 @@ class SolveServer:
         if clock is None:
             clock = tracer._clock if tracer is not None else obs_clock.DEFAULT
         self.clock = clock
+        self.faults = faults  # FaultInjector | None (None = zero cost)
+        self.watchdog = watchdog  # guard.Watchdog | None (None = off)
+        self.backoff_base_ms = float(backoff_base_ms)
+        self.backoff_max_ms = float(backoff_max_ms)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_ms = float(breaker_cooldown_ms)
         self.pool = pool or PreparedPool(
             pool_size, checkpoint=checkpoint, metrics=self.metrics,
-            clock=self.clock, tracer=tracer, **(prepare_kwargs or {})
+            clock=self.clock, tracer=tracer, faults=faults,
+            **(prepare_kwargs or {})
         )
         self.num_epochs = int(num_epochs)
         self.tol = tol
@@ -491,9 +644,36 @@ class SolveServer:
             "server_solve_ewma_seconds",
             "EWMA batch solve time (the policy's deadline estimate)",
         )
+        self._c_failures = m.counter(
+            "server_failures_total", "solve failures observed, by reason"
+        )
+        self._c_retries = m.counter(
+            "server_retries_total", "containment ladder attempts, by stage"
+        )
+        self._c_recovered = m.counter(
+            "server_recovered_requests_total",
+            "requests that failed at least once, then succeeded",
+        )
+        self._c_failed = m.counter(
+            "server_failed_requests_total",
+            "futures resolved with a structured SolveFailure",
+        )
+        self._c_cancelled = m.counter(
+            "server_cancelled_total",
+            "already-done (cancelled) requests dropped at dispatch",
+        )
+        self._c_breaker = m.counter(
+            "server_breaker_transitions_total",
+            "circuit breaker transitions, by target state",
+        )
         self._queues: dict[str, _PendingQueue] = {}
         self._dispatchers: dict[str, asyncio.Task] = {}
         self._solve_s: dict[str, float] = {}  # EWMA batch solve time
+        self._seq = 0  # submit-order request counter (fault-plan targets)
+        # per-fingerprint circuit breaker: consecutive NORMAL-dispatch
+        # failures trip it open; recovery-ladder attempts never count
+        # (they are already contained)
+        self._breaker: dict[str, dict] = {}
         self._executor = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="solve"
         )
@@ -536,6 +716,13 @@ class SolveServer:
             ),
             bulk_batches=int(v("server_class_batches_total", priority="bulk")),
             admission_rejects=int(v("server_admission_rejects_total")),
+            # failures/retries are labeled by reason/stage: read the
+            # cross-label aggregate, not one series
+            failures=int(self.metrics.total("server_failures_total")),
+            retries=int(self.metrics.total("server_retries_total")),
+            recovered_requests=int(v("server_recovered_requests_total")),
+            failed_requests=int(v("server_failed_requests_total")),
+            cancelled=int(v("server_cancelled_total")),
         )
 
     def stats(self) -> dict:
@@ -564,6 +751,9 @@ class SolveServer:
             "server_flushes_total", "server_class_batches_total",
             "server_admission_rejects_total", "server_queue_ms",
             "server_solve_ms", "server_batch_size",
+            "server_failures_total", "server_retries_total",
+            "server_recovered_requests_total",
+            "server_failed_requests_total", "server_cancelled_total",
         ):
             metric = self.metrics.get(name)
             if metric is not None:
@@ -637,6 +827,15 @@ class SolveServer:
         except AdmissionError:
             self._c_rejects.inc()
             raise
+        if not self._breaker_allows(fingerprint):
+            # open circuit: fail fast instead of queueing work the system
+            # is currently failing — the half-open trial after the
+            # cooldown is what probes recovery
+            self._c_failures.labels(reason="breaker_open").inc()
+            self._c_failed.inc()
+            raise SolveFailure(
+                fingerprint, "breaker_open", attempts=0, request=self._seq
+            )
         if trace_id is None:
             trace_id = (
                 self.tracer.new_trace_id() if self.tracer is not None else 0
@@ -647,8 +846,18 @@ class SolveServer:
             None if options.deadline_ms is None
             else now + options.deadline_ms / 1e3
         )
-        queue.push(_Pending(b, future, now, options, deadline_at, trace_id))
+        seq = self._seq
+        self._seq += 1
+        queue.push(
+            _Pending(b, future, now, options, deadline_at, trace_id, seq)
+        )
         return await future
+
+    @property
+    def next_request_seq(self) -> int:
+        """The seq the NEXT submit will get — lets a fault plan target
+        absolute request indices relative to warm-up traffic."""
+        return self._seq
 
     # -- batching loop ------------------------------------------------------
 
@@ -684,6 +893,128 @@ class SolveServer:
             self._c_class.labels(priority=priority.name.lower()).inc()
             await self._solve_batch(fingerprint, batch, reason, priority)
 
+    # -- fault containment --------------------------------------------------
+
+    def _breaker_allows(self, fingerprint: str) -> bool:
+        """True iff dispatch/submit may proceed (closed or half-open)."""
+        st = self._breaker.get(fingerprint)
+        if st is None or st["state"] == "closed":
+            return True
+        if st["state"] == "open":
+            if self.clock.now() < st["open_until"]:
+                return False
+            st["state"] = "half_open"  # cooldown over: admit a trial
+            self._c_breaker.labels(to="half_open").inc()
+            if self.tracer is not None:
+                t = self.clock.now()
+                self.tracer.span_at(
+                    "breaker.half_open", t, t, trace_id=SERVER_TRACK,
+                    cat="fault", fingerprint=fingerprint,
+                )
+        return True  # half_open: let the trial through
+
+    def _breaker_record(self, fingerprint: str, ok: bool) -> None:
+        """Feed a NORMAL-dispatch outcome into the per-system breaker.
+        Recovery-ladder attempts never call this — they are contained."""
+        st = self._breaker.setdefault(
+            fingerprint, {"state": "closed", "consec": 0, "open_until": 0.0}
+        )
+        if ok:
+            if st["state"] != "closed":
+                self._c_breaker.labels(to="closed").inc()
+                if self.tracer is not None:
+                    t = self.clock.now()
+                    self.tracer.span_at(
+                        "breaker.closed", t, t, trace_id=SERVER_TRACK,
+                        cat="fault", fingerprint=fingerprint,
+                    )
+            st["state"], st["consec"] = "closed", 0
+            return
+        st["consec"] += 1
+        trip = st["state"] == "half_open" or (
+            st["state"] == "closed" and st["consec"] >= self.breaker_threshold
+        )
+        if trip:
+            st["state"] = "open"
+            st["open_until"] = (
+                self.clock.now() + self.breaker_cooldown_ms / 1e3
+            )
+            self._c_breaker.labels(to="open").inc()
+            if self.tracer is not None:
+                t = self.clock.now()
+                self.tracer.span_at(
+                    "breaker.open", t, t, trace_id=SERVER_TRACK,
+                    cat="fault", fingerprint=fingerprint,
+                    consecutive_failures=st["consec"],
+                )
+
+    @staticmethod
+    def _failure_reason(exc: BaseException) -> str:
+        if isinstance(exc, InjectedFault):
+            return exc.kind if exc.kind in ("nan", "stall") else "error"
+        return "error"
+
+    def _expired(self, pending: _Pending) -> bool:
+        t = pending.options.timeout_ms
+        return (
+            t is not None
+            and (self.clock.now() - pending.t_enqueue) >= t / 1e3
+        )
+
+    def _fail_request(
+        self,
+        fingerprint: str,
+        pending: _Pending,
+        reason: str,
+        attempts: int,
+        cause: BaseException | None = None,
+    ) -> None:
+        """Resolve ONE future with a structured ``SolveFailure``."""
+        self._c_failed.inc()
+        if self.tracer is not None:
+            t = self.clock.now()
+            self.tracer.span_at(
+                "fail", t, t, trace_id=pending.trace_id, cat="fault",
+                fingerprint=fingerprint, reason=reason, attempts=attempts,
+            )
+        if not pending.future.done():
+            pending.future.set_exception(
+                SolveFailure(
+                    fingerprint, reason, attempts=attempts,
+                    request=pending.seq, cause=cause,
+                )
+            )
+
+    async def _backoff(self, attempt: int) -> float:
+        """Exponential backoff between ladder attempts, on the INJECTED
+        clock: a ``ManualClock`` advances (deterministic tests — no real
+        sleeping), a real clock sleeps on the event loop."""
+        delay = (
+            min(self.backoff_base_ms * (2.0 ** attempt), self.backoff_max_ms)
+            / 1e3
+        )
+        if hasattr(self.clock, "advance"):
+            self.clock.advance(delay)
+        else:
+            await asyncio.sleep(delay)
+        return delay
+
+    def _sick_columns(self, result, nbatch: int, tol) -> dict[int, str]:
+        """Watchdog verdicts for the REAL (non-padded) batch columns:
+        ``{batch_index: status}`` for every unhealthy column. ``{}`` when
+        the watchdog is off — zero work, identical behavior to PR 8."""
+        if self.watchdog is None:
+            return {}
+        try:
+            health = self.watchdog.assess(result, tol=tol)
+        except ValueError:  # method without a residual history (cgnr/dgd)
+            return {}
+        return {
+            i: health.status[i]
+            for i in range(min(nbatch, len(health.status)))
+            if health.status[i] != STATUS_OK
+        }
+
     async def _solve_batch(
         self,
         fingerprint: str,
@@ -691,6 +1022,95 @@ class SolveServer:
         reason: str = "full",
         priority: Priority = Priority.BULK,
     ):
+        """Contained dispatch: solve the batch; on failure, isolate and
+        recover instead of scattering the exception batch-wide.
+
+        * Requests whose futures are already done (caller cancelled) are
+          dropped up front — a dead request never occupies a column, and
+          can neither poison nor stall its batchmates.
+        * Expired ``timeout_ms`` budgets and an open circuit breaker fail
+          their requests fast with ``SolveFailure`` before any solve.
+        * A whole-batch exception bisects: each half redispatches through
+          this same path, so the poison request is isolated in O(log k)
+          extra solves while innocent batchmates succeed on the way.
+        * A singleton failure — or a watchdog-flagged NaN/stalled column
+          in an otherwise healthy batch — enters the ``_recover`` ladder.
+
+        The dispatcher task survives every path, or pending submits hang.
+        """
+        alive = [p for p in batch if not p.future.done()]
+        if len(alive) < len(batch):
+            self._c_cancelled.inc(len(batch) - len(alive))
+        batch = alive
+        live: list[_Pending] = []
+        for p in batch:
+            if self._expired(p):
+                self._c_failures.labels(reason="timeout").inc()
+                self._fail_request(fingerprint, p, "timeout", attempts=0)
+            else:
+                live.append(p)
+        if not live:
+            return
+        if not self._breaker_allows(fingerprint):
+            for p in live:
+                self._c_failures.labels(reason="breaker_open").inc()
+                self._fail_request(
+                    fingerprint, p, "breaker_open", attempts=0
+                )
+            return
+        try:
+            result, columns, tol, t0, t1 = await self._attempt(
+                fingerprint, live
+            )
+        except Exception as exc:
+            self._c_failures.labels(reason=self._failure_reason(exc)).inc()
+            self._breaker_record(fingerprint, ok=False)
+            if self.tracer is not None:
+                self.tracer.span_at(
+                    "batch", self.clock.now(), self.clock.now(),
+                    trace_id=SERVER_TRACK, cat="server",
+                    fingerprint=fingerprint, batch_size=len(live),
+                    reason=reason, priority=priority.name.lower(),
+                    error=repr(exc),
+                )
+            if len(live) == 1:
+                await self._recover(
+                    fingerprint, live[0], self._failure_reason(exc), exc,
+                    priority,
+                )
+                return
+            # bisect: innocent batchmates retry (and succeed) in halves;
+            # the poison request funnels down to a singleton recovery
+            mid = len(live) // 2
+            self._c_retries.labels(stage="bisect").inc()
+            for half in (live[:mid], live[mid:]):
+                await self._solve_batch(
+                    fingerprint, half, "bisect", priority
+                )
+            return
+        sick = self._sick_columns(result, len(live), tol)
+        self._breaker_record(fingerprint, ok=True)
+        self._deliver(
+            fingerprint, live, columns, tol, t0, t1, reason, priority,
+            skip=frozenset(sick),
+        )
+        for i, status in sick.items():
+            self._c_failures.labels(reason=status).inc()
+            await self._recover(
+                fingerprint, live[i], status, None, priority
+            )
+
+    async def _attempt(
+        self,
+        fingerprint: str,
+        batch: list[_Pending],
+        prep_source: str = "pool",
+    ):
+        """ONE coalesced solve on the worker thread. Returns ``(result,
+        columns, tol, t_dispatch, t_done)``; raises on any failure
+        (including injected ones). ``prep_source`` picks the ladder rung:
+        ``"pool"`` (normal get), ``"fallback"`` (degraded re-prepare), or
+        ``"refresh"`` (checkpoint-bypassing fresh prepare)."""
         loop = asyncio.get_running_loop()
         t_dispatch = self.clock.now()
         # the batch shares one batch key (``_PendingQueue.take`` groups on
@@ -717,12 +1137,23 @@ class SolveServer:
                     warm[:, i] = p.options.x0
                     mask[i] = True
             x0_arg = (warm, mask)
+        seqs = tuple(p.seq for p in batch)
 
         def run():
-            # pool.get inside the solver thread: a cache miss re-prepares
-            # there, and the local reference keeps the factors alive even if
-            # the pool evicts this entry mid-solve
-            prep = self.pool.get(fingerprint)
+            # pool access inside the solver thread: a cache miss (or a
+            # ladder re-prepare) factorizes there, and the local reference
+            # keeps the factors alive even if the pool evicts mid-solve
+            if prep_source == "fallback":
+                prep = self.pool.fallback(fingerprint)
+            elif prep_source == "refresh":
+                prep = self.pool.refresh(fingerprint)
+            else:
+                prep = self.pool.get(fingerprint)
+            actions = {}
+            if self.faults is not None:
+                actions = self.faults.on_solve(
+                    fingerprint, seqs, path=getattr(prep, "path", None)
+                )
             kwargs = dict(self.solve_kwargs)
             if tol is not None and prep.method in SESSION_METHODS:
                 # arm the masked in-scan early exit at the reporting
@@ -737,34 +1168,47 @@ class SolveServer:
                 # per-block diagnostics are consensus-only (cgnr/dgd have no
                 # block decomposition to attribute residuals to)
                 kwargs.pop("block_history")
-            return prep.solve(B, num_epochs=self.num_epochs, **kwargs)
-
-        try:
-            result = await loop.run_in_executor(self._executor, run)
-            t_done = self.clock.now()
-            solve_ms = (t_done - t_dispatch) * 1e3
-            columns = result.per_column(tol=tol)
-        except Exception as exc:  # scatter the failure to every batchmate —
-            # the dispatcher task must survive, or pending submits hang
-            if self.tracer is not None:
-                self.tracer.span_at(
-                    "batch", t_dispatch, self.clock.now(),
-                    trace_id=SERVER_TRACK, cat="server",
-                    fingerprint=fingerprint, batch_size=len(batch),
-                    reason=reason, priority=priority.name.lower(),
-                    error=repr(exc),
+            result = prep.solve(B, num_epochs=self.num_epochs, **kwargs)
+            if actions and self.faults is not None:
+                cols = {s: i for i, s in enumerate(seqs)}
+                result = self.faults.corrupt_result(
+                    result, actions,
+                    {s: cols[s] for s in actions if s in cols},
                 )
-            for pending in batch:
-                if not pending.future.done():
-                    pending.future.set_exception(exc)
-            return
+            return result
+
+        result = await loop.run_in_executor(self._executor, run)
+        t_done = self.clock.now()
+        columns = result.per_column(tol=tol)
+        return result, columns, tol, t_dispatch, t_done
+
+    def _deliver(
+        self,
+        fingerprint: str,
+        batch: list[_Pending],
+        columns,
+        tol,
+        t_dispatch: float,
+        t_done: float,
+        reason: str,
+        priority: Priority,
+        attempts: int = 1,
+        skip: frozenset = frozenset(),
+    ) -> None:
+        """Scatter per-column results to the batch's futures (skipping the
+        watchdog-flagged indices in ``skip`` — those recover separately)
+        and record the batch's metrics/spans."""
+        solve_ms = (t_done - t_dispatch) * 1e3
         # EWMA batch solve time — what the policy's deadline pull-forward
         # assumes the NEXT batch will cost
         prev = self._solve_s.get(fingerprint)
         dt = solve_ms / 1e3
-        self._solve_s[fingerprint] = dt if prev is None else 0.7 * prev + 0.3 * dt
+        self._solve_s[fingerprint] = (
+            dt if prev is None else 0.7 * prev + 0.3 * dt
+        )
         self._g_ewma.set(self._solve_s[fingerprint])
-        self._c_requests.inc(len(batch))
+        delivered = len(batch) - len(skip)
+        self._c_requests.inc(delivered)
         self._c_batches.inc()
         self._h_solve_ms.observe(solve_ms)
         self._h_batch_size.observe(len(batch))
@@ -780,6 +1224,8 @@ class SolveServer:
                 priority=priority.name.lower(),
             )
         for i, (pending, col) in enumerate(zip(batch, columns)):
+            if i in skip:
+                continue
             queue_ms = (t_dispatch - pending.t_enqueue) * 1e3
             self._h_queue_ms.observe(queue_ms)
             if tracer is not None:
@@ -797,6 +1243,7 @@ class SolveServer:
                     converged=bool(col.converged),
                 )
             if pending.future.done():  # caller went away (cancelled)
+                self._c_cancelled.inc()
                 continue
             pending.future.set_result(
                 RequestResult(
@@ -807,8 +1254,91 @@ class SolveServer:
                     batch_size=len(batch),
                     queue_ms=queue_ms,
                     solve_ms=solve_ms,
+                    attempts=attempts,
                 )
             )
+
+    async def _recover(
+        self,
+        fingerprint: str,
+        pending: _Pending,
+        reason: str,
+        cause: BaseException | None,
+        priority: Priority,
+    ) -> None:
+        """The single-request containment ladder, in escalation order:
+
+            retry × ``max_retries`` → fallback re-prepare (``gram_solver``
+            pcg→direct, or matfree→dense) → checkpoint-bypassing fresh
+            prepare → structured ``SolveFailure``
+
+        Exponential backoff (on the injected clock) precedes every rung;
+        the ``timeout_ms`` budget is re-checked between rungs, so a slow
+        ladder converts into a clean timeout rather than unbounded work.
+        Every attempt is a metric (``server_retries_total{stage=}``) and a
+        trace span; a success counts ``server_recovered_requests_total``
+        and delivers a normal ``RequestResult`` (with its ``attempts``)."""
+        stages = ["retry"] * max(0, int(pending.options.max_retries))
+        if self.pool.has_fallback(fingerprint):
+            stages.append("fallback")
+        stages.append("refresh")
+        last_reason, last_exc = reason, cause
+        attempts = 1  # the failed original dispatch
+        for stage in stages:
+            if pending.future.done():
+                self._c_cancelled.inc()
+                return
+            await self._backoff(attempts - 1)
+            if self._expired(pending):
+                self._c_failures.labels(reason="timeout").inc()
+                self._fail_request(
+                    fingerprint, pending, "timeout", attempts, last_exc
+                )
+                return
+            attempts += 1
+            self._c_retries.labels(stage=stage).inc()
+            t_stage = self.clock.now()
+            prep_source = "pool" if stage == "retry" else stage
+            try:
+                result, columns, tol, t0, t1 = await self._attempt(
+                    fingerprint, [pending], prep_source=prep_source
+                )
+            except Exception as exc:
+                last_reason, last_exc = self._failure_reason(exc), exc
+                self._c_failures.labels(reason=last_reason).inc()
+                if self.tracer is not None:
+                    self.tracer.span_at(
+                        f"recover.{stage}", t_stage, self.clock.now(),
+                        trace_id=pending.trace_id, cat="fault",
+                        fingerprint=fingerprint, error=repr(exc),
+                    )
+                continue
+            sick = self._sick_columns(result, 1, tol)
+            if sick:
+                last_reason, last_exc = sick[0], None
+                self._c_failures.labels(reason=last_reason).inc()
+                if self.tracer is not None:
+                    self.tracer.span_at(
+                        f"recover.{stage}", t_stage, self.clock.now(),
+                        trace_id=pending.trace_id, cat="fault",
+                        fingerprint=fingerprint, status=last_reason,
+                    )
+                continue
+            self._c_recovered.inc()
+            if self.tracer is not None:
+                self.tracer.span_at(
+                    f"recover.{stage}", t_stage, self.clock.now(),
+                    trace_id=pending.trace_id, cat="fault",
+                    fingerprint=fingerprint, recovered=True,
+                )
+            self._deliver(
+                fingerprint, [pending], columns, tol, t0, t1,
+                f"recover_{stage}", priority, attempts=attempts,
+            )
+            return
+        self._fail_request(
+            fingerprint, pending, last_reason, attempts, last_exc
+        )
 
 
 class ServerSession:
@@ -893,11 +1423,16 @@ async def replay_trace(
     fingerprint: str,
     rhs: np.ndarray,  # (m, k) — column i is request i's b
     gaps_s: Any,  # iterable of k inter-arrival gaps in seconds (first may be 0)
+    *,
+    return_exceptions: bool = False,
 ) -> list[RequestResult]:
     """Replay an arrival trace: request i fires after ``sum(gaps_s[:i+1])``.
 
     Results come back indexed by REQUEST (not completion) order, so callers
     can check each response against the right-hand side that produced it.
+    With ``return_exceptions=True`` a request that fails structurally keeps
+    its slot as the raised ``SolveFailure`` instead of aborting the replay
+    (how the CLI runs a --fault-plan trace to completion).
     Used by ``repro.launch.serve_solver`` and the serving benchmark.
     """
 
@@ -909,4 +1444,4 @@ async def replay_trace(
     for i, gap in enumerate(gaps_s):
         arrival += float(gap)
         tasks.append(asyncio.create_task(client(i, arrival)))
-    return list(await asyncio.gather(*tasks))
+    return list(await asyncio.gather(*tasks, return_exceptions=return_exceptions))

@@ -1,0 +1,209 @@
+"""Solve-watchdog tests (ISSUE 9 tentpole, part 2).
+
+What must hold:
+  (a) classification: NaN/Inf columns and flat-residual stalls are
+      flagged per column from the residual trace alone; converged,
+      converging, floor-frozen, and zero (padded) columns are healthy;
+  (b) healthy real solves on all three consensus paths assess clean —
+      including straggler-mode sharded solves over many seeds (stale
+      contributions must NOT be misclassified as stalls);
+  (c) the watchdog is host-side only: assessing a result never perturbs
+      the solve (bit-identical x) and adds zero in-scan collectives
+      (audited via ``audit_epoch_collectives``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed, partition_system, prepare
+from repro.core.guard import (
+    STATUS_NAN,
+    STATUS_OK,
+    STATUS_STALLED,
+    SolveHealth,
+    Watchdog,
+    assess,
+)
+from repro.obs.convergence import audit_epoch_collectives
+from repro.sparse import make_problem
+
+PREP_KW = dict(num_blocks=8, materialize_p=False)
+
+
+def _trace(*cols):
+    """Stack per-column residual traces into the (E, k) guard input."""
+    return np.stack([np.asarray(c, np.float64) for c in cols], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# classification on synthetic traces
+# ---------------------------------------------------------------------------
+
+
+def test_nan_column_flagged():
+    good = np.geomspace(1.0, 1e-6, 20)
+    bad = good.copy()
+    bad[-3:] = np.nan
+    health = assess(_trace(good, bad))
+    assert health.status == (STATUS_OK, STATUS_NAN)
+    assert health.nan_columns == (1,)
+    assert not health.ok
+
+
+def test_inf_column_flagged():
+    good = np.geomspace(1.0, 1e-6, 20)
+    div = np.geomspace(1.0, 1e12, 20)
+    div[-1] = np.inf
+    health = assess(_trace(good, div))
+    assert health.status[1] == STATUS_NAN
+
+
+def test_stalled_column_flagged_and_converging_is_not():
+    stalled = np.concatenate([np.geomspace(1.0, 0.5, 4), np.full(16, 0.5)])
+    converging = np.geomspace(1.0, 1e-4, 20)  # steady linear decay
+    health = assess(_trace(stalled, converging))
+    assert health.status == (STATUS_STALLED, STATUS_OK)
+    assert health.stalled_columns == (0,)
+    assert health.sick_columns == (0,)
+
+
+def test_converged_then_flat_is_healthy_under_tol():
+    """The in-scan early exit FREEZES converged columns — a flat tail at
+    or below tolerance is success, not a stall."""
+    frozen = np.concatenate([np.geomspace(1.0, 1e-8, 10), np.full(30, 1e-8)])
+    assert assess(_trace(frozen), tol=1e-3).status == (STATUS_OK,)
+    # without the tolerance, the relative floor (1e-10 of epoch 0) saves it
+    assert assess(_trace(frozen * 1e-4)).status == (STATUS_OK,)
+
+
+def test_zero_padded_column_is_healthy():
+    """Bucket-padding appends all-zero columns whose residual is exactly
+    0 every epoch; 0/0 flatness must not read as a stall."""
+    zero = np.zeros(20)
+    health = assess(_trace(zero))
+    assert health.status == (STATUS_OK,)
+
+
+def test_short_trace_not_judged():
+    flat = np.full(5, 1.0)  # shorter than the stall window
+    assert assess(_trace(flat), watchdog=Watchdog(stall_window=8)).ok
+
+
+def test_stall_window_and_decay_are_respected():
+    # 3%/window decay: stalled under a 5% bound, healthy under a 1% bound
+    slow = np.geomspace(1.0, 0.97, 9)
+    strict = Watchdog(stall_window=8, stall_decay=0.95)
+    lax = Watchdog(stall_window=8, stall_decay=0.99)
+    assert assess(_trace(slow), watchdog=strict).status == (STATUS_STALLED,)
+    assert assess(_trace(slow), watchdog=lax).status == (STATUS_OK,)
+
+
+def test_nan_solution_flagged_even_with_clean_trace(monkeypatch):
+    """A NaN solution with a finite residual trace (the injected-NaN
+    serving fault) is still a NaN verdict: the guard checks x too."""
+    prob = make_problem(n=48, m=192, seed=0, dtype=np.float32)
+    res = prepare(prob.A, **PREP_KW).solve(prob.b, num_epochs=30)
+    x = np.array(np.asarray(res.x))
+    if x.ndim == 1:
+        x = x[:, None]
+    x[:, 0] = np.nan
+    import dataclasses
+
+    doctored = dataclasses.replace(res, x=x)
+    assert assess(doctored).status[0] == STATUS_NAN
+
+
+def test_health_dataclass_roundtrip():
+    h = SolveHealth(status=(STATUS_OK, STATUS_NAN, STATUS_STALLED),
+                    checked_epochs=10)
+    assert h.nan_columns == (1,) and h.stalled_columns == (2,)
+    assert h.column_ok(0) and not h.column_ok(2)
+
+
+def test_missing_residual_history_raises():
+    with pytest.raises(ValueError, match="residual"):
+        assess({"mse": np.ones(4)})
+
+
+# ---------------------------------------------------------------------------
+# real solves assess clean on all three paths
+# ---------------------------------------------------------------------------
+
+
+def test_dense_solve_assesses_healthy():
+    prob = make_problem(n=96, m=384, seed=3, dtype=np.float32)
+    rng = np.random.default_rng(17)
+    B = prob.A @ rng.standard_normal((96, 4)).astype(np.float32)
+    res = prepare(prob.A, **PREP_KW).solve(B, num_epochs=60)
+    health = res.assess_health(tol=1e-3)
+    assert health.ok and health.checked_epochs == 60
+
+
+def test_matfree_solve_assesses_healthy():
+    from repro.sparse import generate_schenk_like
+
+    coo = generate_schenk_like(256, sparsity=0.99, seed=5)
+    rng = np.random.default_rng(11)
+    B = coo.to_dense().astype(np.float32) @ rng.standard_normal(
+        (256, 3)
+    ).astype(np.float32)
+    res = prepare(coo, mode="matfree", num_blocks=8).solve(B, num_epochs=40)
+    assert res.assess_health().ok
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_straggler_solves_not_misclassified_as_stalls(seed):
+    """Property over seeds (ISSUE 9 satellite): straggler-mode sharded
+    solves drop 30% of block contributions per epoch — the η-EMA absorbs
+    the staleness into a slower but still-decaying residual, which the
+    stall detector must NOT confuse with frozen progress."""
+    prob = make_problem(n=64, m=256, seed=seed, dtype=np.float32)
+    part = partition_system(prob.A, prob.b, 8)
+    mesh = jax.make_mesh((1,), ("data",))
+    _, hist = distributed.solve_sharded(
+        part.blocks, part.bvecs, mesh, part.mode,
+        num_epochs=150, straggler_prob=0.3, seed=seed,
+        x_ref=jnp.asarray(prob.x_true),
+    )
+    health = assess({"residual_sq": np.asarray(hist["residual_sq"])})
+    assert health.ok, (seed, health.status)
+
+
+# ---------------------------------------------------------------------------
+# zero-cost guarantee: bit-identical solves, no extra collectives
+# ---------------------------------------------------------------------------
+
+
+def test_assessment_never_perturbs_the_solve():
+    prob = make_problem(n=96, m=384, seed=3, dtype=np.float32)
+    prep = prepare(prob.A, **PREP_KW)
+    first = prep.solve(prob.b, num_epochs=40)
+    first.assess_health(tol=1e-3)  # host-side read of the history
+    second = prep.solve(prob.b, num_epochs=40)
+    assert np.array_equal(np.asarray(first.x), np.asarray(second.x))
+    np.testing.assert_array_equal(
+        np.asarray(first.history["residual_sq"]),
+        np.asarray(second.history["residual_sq"]),
+    )
+
+
+def test_watchdog_adds_zero_in_scan_collectives():
+    """The acceptance-criteria audit: the guard reads emitted history, so
+    the sharded epoch's collective budget is EXACTLY the PR 8 budget —
+    assessing a result changes nothing in the compiled program."""
+    from repro.sparse import generate_schenk_like
+
+    coo = generate_schenk_like(256, sparsity=0.99, seed=5)
+    mesh = jax.make_mesh((1,), ("data",))
+    sharded = prepare(coo, mode="matfree", num_blocks=8, mesh=mesh)
+    rng = np.random.default_rng(11)
+    b = coo.to_dense().astype(np.float32) @ rng.standard_normal(
+        256
+    ).astype(np.float32)
+    base = audit_epoch_collectives(sharded, b, num_epochs=6)
+    res = sharded.solve(b, num_epochs=6)
+    assert assess(res).ok
+    after = audit_epoch_collectives(sharded, b, num_epochs=6)
+    assert after["ops"] == base["ops"]
+    assert after["payload_elems"] == base["payload_elems"]

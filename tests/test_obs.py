@@ -323,6 +323,9 @@ STATS_SCHEMA = {
     "bulk_batches", "admission_rejects", "mean_batch_size",
     "prepares", "hits", "evictions", "restores", "restore_ms",
     "gets", "misses",
+    # fault-containment counters (ISSUE 9)
+    "failures", "retries", "recovered_requests", "failed_requests",
+    "cancelled",
 }
 
 

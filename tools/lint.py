@@ -27,27 +27,33 @@ def run_ruff() -> int:
 
 
 def _unused_imports(tree: ast.AST, source: str) -> list[tuple[int, str]]:
-    imported: dict[str, int] = {}
+    # name -> (alias lineno, statement lineno): a `# noqa` on EITHER line
+    # opts out, so both per-name comments inside a multi-line
+    # `from x import (...)` block and one on its opening line work
+    imported: dict[str, tuple[int, int]] = {}
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
             for a in node.names:
-                imported[(a.asname or a.name).split(".")[0]] = node.lineno
+                name = (a.asname or a.name).split(".")[0]
+                imported[name] = (a.lineno, node.lineno)
         elif isinstance(node, ast.ImportFrom):
             if node.module == "__future__":
                 continue
             for a in node.names:
                 if a.name != "*":
-                    imported[a.asname or a.name] = node.lineno
+                    imported[a.asname or a.name] = (a.lineno, node.lineno)
     used = {
         n.id for n in ast.walk(tree) if isinstance(n, ast.Name)
     } | {
         n.attr for n in ast.walk(tree) if isinstance(n, ast.Attribute)
     }
+    lines = source.splitlines()
     out = []
-    for name, lineno in imported.items():
+    for name, (lineno, stmt_lineno) in imported.items():
         # `# noqa` opt-outs and __all__ re-exports stay
-        line = source.splitlines()[lineno - 1]
-        if "noqa" in line or f'"{name}"' in source or f"'{name}'" in source:
+        if any("noqa" in lines[ln - 1] for ln in (lineno, stmt_lineno)):
+            continue
+        if f'"{name}"' in source or f"'{name}'" in source:
             continue
         if name not in used:
             out.append((lineno, name))
@@ -74,9 +80,30 @@ def banned_wall_clock(tree: ast.AST) -> list[tuple[int, str]]:
     return out
 
 
-def run_clock_ban() -> int:
-    """Always-on repo rule (runs with AND without ruff): no direct
-    wall-clock reads under ``src/repro/serving/``."""
+def banned_swallowed_exceptions(tree: ast.AST) -> list[tuple[int, str]]:
+    """``except Exception: pass`` / bare ``except: pass`` handlers — in the
+    serving layer every failure must be contained DELIBERATELY (counted,
+    retried, or surfaced as a ``SolveFailure``); a silent swallow is how
+    wedged futures happen."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        broad = node.type is None or (
+            isinstance(node.type, ast.Name)
+            and node.type.id in ("Exception", "BaseException")
+        )
+        swallows = all(isinstance(s, ast.Pass) for s in node.body)
+        if broad and swallows:
+            what = "except:" if node.type is None else f"except {node.type.id}:"
+            out.append((node.lineno, what))
+    return out
+
+
+def run_serving_bans() -> int:
+    """Always-on repo rules (run with AND without ruff) over
+    ``src/repro/serving/``: no direct wall-clock reads, and no silently
+    swallowed broad exceptions."""
     failures = 0
     for path in sorted((ROOT / "src" / "repro" / "serving").rglob("*.py")):
         rel = path.relative_to(ROOT)
@@ -85,12 +112,21 @@ def run_clock_ban() -> int:
             tree = ast.parse(source, filename=str(rel))
         except SyntaxError:
             continue  # the general pass reports syntax errors
+        lines = source.splitlines()
         for lineno, name in banned_wall_clock(tree):
-            if "noqa" in source.splitlines()[lineno - 1]:
+            if "noqa" in lines[lineno - 1]:
                 continue
             print(
                 f"{rel}:{lineno}: {name}() in the serving layer — use the "
                 f"injectable repro.obs.clock (server/pool `clock`) instead"
+            )
+            failures += 1
+        for lineno, what in banned_swallowed_exceptions(tree):
+            if "noqa" in lines[lineno - 1]:
+                continue
+            print(
+                f"{rel}:{lineno}: `{what} pass` in the serving layer — "
+                f"count it, retry it, or raise SolveFailure; never swallow"
             )
             failures += 1
     return failures
@@ -121,11 +157,11 @@ def run_fallback() -> int:
 
 
 def main() -> int:
-    clock_failures = run_clock_ban()
+    serving_failures = run_serving_bans()
     if shutil.which("ruff"):
-        return run_ruff() or (1 if clock_failures else 0)
+        return run_ruff() or (1 if serving_failures else 0)
     print("ruff not installed; running built-in fallback lint", file=sys.stderr)
-    return run_fallback() or (1 if clock_failures else 0)
+    return run_fallback() or (1 if serving_failures else 0)
 
 
 if __name__ == "__main__":
