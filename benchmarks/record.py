@@ -137,7 +137,7 @@ def main() -> None:
     )
     ap.add_argument(
         "--sections",
-        default="sparse,kernels,sparse_sharded,streaming,serving_qos,chaos",
+        default="sparse,kernels,sparse_sharded,streaming,serving_qos,chaos,heterogeneity",
         help="comma-separated section names to compare",
     )
     ap.add_argument("--max-regression", type=float, default=0.25)

@@ -60,6 +60,7 @@ def main() -> None:
     from benchmarks import (
         chaos,
         convergence,
+        heterogeneity,
         kernels,
         multirhs,
         record,
@@ -86,6 +87,7 @@ def main() -> None:
         "sparse_sharded": lambda: sparse_sharded.run(quick=args.quick),
         "streaming": lambda: streaming.run(quick=args.quick),
         "chaos": lambda: chaos.run(quick=args.quick),
+        "heterogeneity": lambda: heterogeneity.run(quick=args.quick),
     }
     if args.only:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -2,10 +2,16 @@
 Projection-Based Consensus solvers + the DGD baseline."""
 from repro.core.partition import (
     Partition,
+    PartitionPlan,
     block_rhs,
     partition_matrix,
     partition_system,
     resolve_mode,
+)
+from repro.core.spectra import (
+    block_spectra_dense,
+    block_spectra_matfree,
+    derive_dynamics,
 )
 from repro.core.solver_api import (
     ColumnResult,
@@ -30,10 +36,20 @@ from repro.core.dapc import (
 from repro.core.dgd import solve_dgd
 from repro.core.cg import solve_cgnr
 from repro.core.guard import SolveHealth, Watchdog
-from repro.core.consensus import run_consensus, tune_hyperparams, block_residual_sq
+from repro.core.consensus import (
+    block_residual_sq,
+    evaluate_candidates,
+    run_consensus,
+    tune_hyperparams,
+)
 
 __all__ = [
     "Partition",
+    "PartitionPlan",
+    "block_spectra_dense",
+    "block_spectra_matfree",
+    "derive_dynamics",
+    "evaluate_candidates",
     "partition_system",
     "partition_matrix",
     "block_rhs",

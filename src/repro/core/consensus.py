@@ -34,6 +34,14 @@ def block_residual_sq(blocks: jnp.ndarray, bvecs: jnp.ndarray, x: jnp.ndarray):
     return jnp.sum(r * r, axis=(0, 1))
 
 
+def _block_col(v, ndim: int):
+    """Reshape a per-block (J,) vector for broadcasting against (J, n[, k])
+    state; scalars pass through untouched."""
+    if getattr(v, "ndim", 0) >= 1:
+        return v.reshape(v.shape + (1,) * (ndim - v.ndim))
+    return v
+
+
 def run_consensus(
     x0s: jnp.ndarray,  # (J, n) or (J, n, k) per-block initial solutions
     apply_fn: Callable[[jnp.ndarray], jnp.ndarray],  # x0s-shaped: P_j v_j
@@ -79,6 +87,12 @@ def run_consensus(
     tests/test_core_solvers.py; EXPERIMENTS.md §Perf solver iteration 3) —
     unlike quantizing x̄ itself, which floors at bf16 ULP.
 
+    ``gamma``/``eta`` accept per-block ``(J,)`` vectors (heterogeneity-aware
+    dynamics): eq. (6) steps block j with γ_j and eq. (7) becomes the
+    weighted mean x̄⁺ = mean_j(η_j·xs_j⁺) + (1−η̄)·x̄ with η̄ = mean(η_j),
+    which reduces EXACTLY to the scalar form when all η_j are equal. With
+    scalar inputs the program is the historical one, bit for bit.
+
     ``avg_every > 1`` is a beyond-paper collective optimization: the
     consensus average (the only cross-worker collective) runs every k-th
     epoch; between averages workers take local projection steps against the
@@ -116,14 +130,33 @@ def run_consensus(
 
     init_metrics = metrics(xbar0)
 
+    per_block = (
+        getattr(gamma, "ndim", 0) >= 1 or getattr(eta, "ndim", 0) >= 1
+    )
+    gam = _block_col(gamma, x0s.ndim)
+    if per_block:
+        eta_col = _block_col(eta, x0s.ndim)
+        eta_bar = (
+            jnp.mean(eta) if getattr(eta, "ndim", 0) >= 1 else eta
+        )
+
     def step(carry, t):
         xs, xbar, resid = carry
-        xs_new = xs + gamma * apply_fn(xbar[None] - xs)  # eq. (6), parallel j
+        xs_new = xs + gam * apply_fn(xbar[None] - xs)  # eq. (6), parallel j
         do_avg = (t + 1) % avg_every == 0
         if compress == "bf16_delta":
-            delta = jnp.mean(xs_new - xbar[None], axis=0)  # the wire payload
-            delta = delta.astype(jnp.bfloat16).astype(xbar.dtype)
-            xbar_new = xbar + eta * delta  # eq. (7), delta form
+            if per_block:  # Δ = mean(η_j (xs_j − x̄)), η folded into the wire
+                delta = jnp.mean(eta_col * (xs_new - xbar[None]), axis=0)
+                delta = delta.astype(jnp.bfloat16).astype(xbar.dtype)
+                xbar_new = xbar + delta
+            else:
+                delta = jnp.mean(xs_new - xbar[None], axis=0)  # wire payload
+                delta = delta.astype(jnp.bfloat16).astype(xbar.dtype)
+                xbar_new = xbar + eta * delta  # eq. (7), delta form
+        elif per_block:  # eq. (7), η_j-weighted mean (reduces to scalar form)
+            xbar_new = (
+                jnp.mean(eta_col * xs_new, axis=0) + (1.0 - eta_bar) * xbar
+            )
         else:
             xbar_new = (
                 eta * jnp.mean(xs_new, axis=0) + (1.0 - eta) * xbar
@@ -147,6 +180,41 @@ def run_consensus(
     return xbar, hist
 
 
+def evaluate_candidates(
+    x0s: jnp.ndarray,
+    apply_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    blocks: jnp.ndarray,
+    bvecs: jnp.ndarray,
+    gammas: jnp.ndarray,  # (C,) scalar or (C, J) per-block candidates
+    etas: jnp.ndarray,  # (C,) scalar or (C, J) per-block candidates
+    probe_epochs: int = 20,
+    block_history: bool = False,
+):
+    """The single vectorized probe-evaluation path behind hyperparameter
+    tuning: run every (γ, η) candidate for ``probe_epochs`` in one vmapped
+    compiled program and score it by final global residual.
+
+    Candidates may be scalars ``(C,)`` or per-block vectors ``(C, J)`` —
+    ``run_consensus`` handles both, so global and per-block dynamics share
+    this one evaluation path instead of duplicating the step logic.
+    Returns ``(scores, block_hist)``; ``block_hist`` is the per-epoch
+    per-block residual history ``(C, E, J[, k])`` when ``block_history``
+    is set, else None.
+    """
+
+    def probe(g, e):
+        xbar, hist = run_consensus(
+            x0s, apply_fn, g, e, probe_epochs,
+            blocks=blocks if block_history else None,
+            bvecs=bvecs if block_history else None,
+            block_history=block_history,
+        )
+        score = block_residual_sq(blocks, bvecs, xbar)
+        return score, hist["block_residual_sq"] if block_history else None
+
+    return jax.vmap(probe)(jnp.asarray(gammas), jnp.asarray(etas))
+
+
 def tune_hyperparams(
     x0s: jnp.ndarray,
     apply_fn: Callable[[jnp.ndarray], jnp.ndarray],
@@ -155,20 +223,35 @@ def tune_hyperparams(
     gammas: jnp.ndarray,
     etas: jnp.ndarray,
     probe_epochs: int = 20,
-) -> tuple[float, float]:
+    plan=None,
+):
     """Grid-search (γ, η) by residual after a short probe run (vmapped).
 
     The paper chooses these "heuristically"; this makes the heuristic
-    reproducible. Cheap: probe runs are vmapped into one compiled program.
+    reproducible. Cheap: probe runs are vmapped into one compiled program
+    (``evaluate_candidates``).
+
+    Returns ``(gamma, eta)``. With a ``PartitionPlan`` supplied, the
+    winning probe additionally reports how each of the plan's blocks
+    converged: the return becomes ``(gamma, eta, rates)`` with ``rates``
+    the per-block geometric decay rate over the probe window — the
+    heterogeneity diagnostic feeding per-block dynamics.
     """
     gg, ee = jnp.meshgrid(gammas, etas, indexing="ij")
     pairs = jnp.stack([gg.ravel(), ee.ravel()], axis=1)
-
-    def probe(pair):
-        xbar, _ = run_consensus(x0s, apply_fn, pair[0], pair[1], probe_epochs)
-        return block_residual_sq(blocks, bvecs, xbar)
-
-    scores = jax.vmap(probe)(pairs)
+    scores, block_hist = evaluate_candidates(
+        x0s, apply_fn, blocks, bvecs, pairs[:, 0], pairs[:, 1],
+        probe_epochs, block_history=plan is not None,
+    )
     scores = jnp.where(jnp.isfinite(scores), scores, jnp.inf)
-    best = pairs[jnp.argmin(scores)]
-    return float(best[0]), float(best[1])
+    if plan is None:
+        best = pairs[jnp.argmin(scores)]
+        return float(best[0]), float(best[1])
+    flat = scores.reshape(scores.shape[0], -1).sum(axis=1)  # fold RHS cols
+    idx = int(jnp.argmin(flat))
+    hist = block_hist[idx]  # (E, J[, k])
+    epochs = hist.shape[0]
+    rates = (
+        hist[-1] / jnp.maximum(hist[0], 1e-30)
+    ) ** (1.0 / (2.0 * max(epochs - 1, 1)))
+    return float(pairs[idx, 0]), float(pairs[idx, 1]), rates

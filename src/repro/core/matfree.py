@@ -81,6 +81,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.prepared import SolveOptions, SolveResult
+from repro.core.spectra import (
+    dynamics_arrays as _dynamics_arrays,
+    dynamics_meta as _dynamics_meta,
+    dynamics_state as _dynamics_state,
+)
 from repro.sparse.bsr import DEFAULT_BLOCK_SHAPE, PartitionedBSR
 from repro.sparse.matrix import COOMatrix
 
@@ -179,11 +184,19 @@ def _gram_pinv(op: PartitionedBSR, dtype) -> jnp.ndarray:
     restricted to the nonsingular sub-block (padding rows — and any exactly
     dependent rows — are annihilated by the pseudo-inverse, matching the CG
     iterates staying pinned at zero there). O(J·p³) once at prepare time.
+
+    The rank cutoff is pinned to the TILE dtype's noise floor, not pinv's
+    1e-15 default: a rank-deficient block (more rows than columns — a tall
+    block of a ragged ``PartitionPlan``) has true zero eigenvalues that
+    float32 tile products smear up to ~ε₃₂·λmax, and inverting that noise
+    turns the projector into garbage. Full-rank Grams have no eigenvalues
+    near either cutoff, so their inverse is unchanged bit for bit.
     """
     J, Rp, Sg = op.gram_indices.shape
     bp = op.gram_data.shape[-2]
     idx = np.asarray(op.gram_indices)
     data = np.asarray(op.gram_data, dtype=np.float64)
+    rcond = float(np.finfo(np.asarray(op.gram_data).dtype).eps) * op.p_pad
     out = np.zeros((J, op.p_pad, op.p_pad), np.float64)
     for j in range(J):
         G = np.zeros((Rp, Rp, bp, bp))
@@ -193,7 +206,9 @@ def _gram_pinv(op: PartitionedBSR, dtype) -> jnp.ndarray:
         G = G.transpose(0, 2, 1, 3).reshape(op.p_pad, op.p_pad)
         live = np.flatnonzero(np.diag(G) > 0)
         if live.size:
-            sub = np.linalg.pinv(G[np.ix_(live, live)], hermitian=True)
+            sub = np.linalg.pinv(
+                G[np.ix_(live, live)], rcond=rcond, hermitian=True
+            )
             out[j][np.ix_(live, live)] = sub
     return jnp.asarray(out.astype(dtype))
 
@@ -268,10 +283,30 @@ def consensus_epochs(
     concatenate to the global (J, k) on the host), so enabling it adds NO
     extra collective to the epoch; disabled, the program is untouched.
 
+    Per-block dynamics (heterogeneity-aware): ``gamma`` may be a
+    ``(J_loc,)`` vector and ``eta`` the pair ``(eta_vec (J_loc,), eta_bar
+    scalar)``. Eq. (7) becomes the η_j-weighted mean x̄⁺ = mean_j(η_j xs_j⁺)
+    + (1−η̄)x̄ — the carried ``q`` then holds the WEIGHTED mean, so the
+    epoch still pays exactly the one ``block_mean`` collective: each shard
+    weights its local blocks by its η_j slice BEFORE the mean, and η̄
+    arrives precomputed as a replicated scalar (zero new collectives).
+    Scalar inputs keep the historical program bit for bit.
+
     Returns ``(x̄ (n, k), history)`` with the same history contract as
     ``MatrixFreePreparedSolver.solve`` documents.
     """
     ones = jnp.ones(bvecs.shape[-1], jnp.int32)
+
+    per_block = isinstance(eta, tuple) or getattr(gamma, "ndim", 0) >= 1
+    if per_block:
+        eta_vec, eta_bar = eta if isinstance(eta, tuple) else (eta, eta)
+        eta_col = (
+            eta_vec[:, None, None]
+            if getattr(eta_vec, "ndim", 0) >= 1 else eta_vec
+        )
+        gam = gamma[:, None, None] if getattr(gamma, "ndim", 0) >= 1 else gamma
+    else:
+        gam = gamma
 
     def mse(xbar):
         d = xbar - (ref[..., None] if ref.ndim == 1 else ref)
@@ -327,15 +362,24 @@ def consensus_epochs(
         # patched with the exact float difference x̄⁺ − KNOWN, keeping z
         # accurate to ULP instead of compounding reassociation noise
         # across epochs. q is the CARRIED global mean of xs (see above).
-        known = eta * q + eta * gamma * (xbar - q) + (1.0 - eta) * xbar
+        if per_block:  # q carries the η_j-weighted mean (see docstring);
+            # KNOWN is only the fused linearization point, the probe patch
+            # below restores exactness for any approximation here
+            known = q + (1.0 - eta_bar) * xbar
+        else:
+            known = eta * q + eta * gamma * (xbar - q) + (1.0 - eta) * xbar
         f, g = op.fused_project(known, y, use_kernels)
-        xs_new = xs + gamma * (xbar[None] - xs - g)  # eq. (6)
-        q_new = block_mean(xs_new)  # the epoch's consensus collective
-        xbar_new = eta * q_new + (1.0 - eta) * xbar  # eq. (7)
+        xs_new = xs + gam * (xbar[None] - xs - g)  # eq. (6)
+        # the epoch's consensus collective (η_j-weighted when per-block)
+        q_new = block_mean(eta_col * xs_new) if per_block else block_mean(xs_new)
+        if per_block:
+            xbar_new = q_new + (1.0 - eta_bar) * xbar  # eq. (7), weighted
+        else:
+            xbar_new = eta * q_new + (1.0 - eta) * xbar  # eq. (7)
         z_new = f + op.matvec(xbar_new - known, use_kernels)
         # exact inner solve keeps the paper's A_j x_j = b_j invariant,
         # so w stays put; inexact CG drifts it by r
-        w_new = w if direct else w + gamma * r
+        w_new = w if direct else w + gam * r
         if active is not None:
             col = active[None]  # (1, k) over (n, k) state
             blk = active[None, None]  # (1, 1, k) over (J, ·, k)
@@ -369,7 +413,10 @@ def consensus_epochs(
             out["mse"] = mse(carry[1])
         return carry, out
 
-    init = (x0s, xbar0, xbar0, w0, z0, jnp.zeros_like(y0))
+    # per-block: the carried q is the weighted mean — one extra collective
+    # at INIT only, outside the scan (the per-epoch budget is untouched)
+    q_init = block_mean(eta_col * x0s) if per_block else xbar0
+    init = (x0s, xbar0, q_init, w0, z0, jnp.zeros_like(y0))
     (_, xbar, _, _, z, _), hist = jax.lax.scan(
         step, init, None, length=num_epochs
     )
@@ -417,6 +464,16 @@ class MatrixFreePreparedSolver:
     gram_solver: str = "direct"  # resolved: "direct" | "pcg"
     gram_inv: jnp.ndarray | None = dataclasses.field(repr=False, default=None)
     warm_start: bool = False
+    partition: str = "uniform"  # "uniform" | "cost_aware"
+    dynamics: str = "global"  # default solve dynamics: "global" | "per_block"
+    plan: object | None = dataclasses.field(repr=False, default=None)
+    block_gamma_weights: np.ndarray | None = dataclasses.field(
+        repr=False, default=None
+    )
+    block_eta_weights: np.ndarray | None = dataclasses.field(
+        repr=False, default=None
+    )
+    block_spectra: dict | None = dataclasses.field(repr=False, default=None)
     num_solves: int = 0
     _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
@@ -451,6 +508,53 @@ class MatrixFreePreparedSolver:
         """What the dense path's (J, p, n) blocks alone would cost."""
         return self.op.dense_bytes
 
+    def block_rhs(self, b) -> jnp.ndarray:
+        """RHS (m,) or (m, k) -> (J, p_pad, k), plan-aware.
+
+        With a cost-aware ``plan`` the original-order rows scatter to their
+        plan slots (the operator's own uniform scatter would misplace
+        them); without one this is exactly ``op.block_rhs``.
+        """
+        if self.plan is None:
+            return self.op.block_rhs(b)
+        b = np.asarray(b)
+        if b.ndim == 1:
+            b = b[:, None]
+        m = self.op.shape[0]
+        if b.shape[0] != m:
+            raise ValueError(f"expected {m} rows, got {b.shape[0]}")
+        out = np.zeros(
+            (self.num_blocks * self.op.p_pad, b.shape[1]),
+            self.op.fwd_data.dtype,
+        )
+        out[self.plan.flat_slots(self.op.p_pad)] = b
+        return jnp.asarray(out.reshape(self.num_blocks, self.op.p_pad, -1))
+
+    def _resolve_dynamics(self, dynamics: str | None) -> bool:
+        """Map a solve-time ``dynamics`` override to the per-block flag."""
+        dyn = self.dynamics if dynamics is None else dynamics
+        if dyn not in ("global", "per_block"):
+            raise ValueError(f"dynamics must be 'global'|'per_block', got {dyn!r}")
+        if dyn == "per_block" and self.block_eta_weights is None:
+            raise ValueError(
+                "per-block dynamics need spectral weights: prepare with "
+                "dynamics='per_block'"
+            )
+        return dyn == "per_block"
+
+    def _dynamics_operands(self, gamma, eta, dtype, per_block: bool):
+        """(γ, η) scan operands: scalars, or per-block vectors scaled by the
+        prepared spectral weights (η arrives as the (vector, mean) pair the
+        weighted eq. 7 consumes — the mean is precomputed host-side so the
+        sharded path adds zero collectives)."""
+        if not per_block:
+            return jnp.asarray(gamma, dtype), jnp.asarray(eta, dtype)
+        gv = np.asarray(self.block_gamma_weights, np.float64) * float(gamma)
+        ev = np.asarray(self.block_eta_weights, np.float64) * float(eta)
+        return jnp.asarray(gv, dtype), (
+            jnp.asarray(ev, dtype), jnp.asarray(ev.mean(), dtype)
+        )
+
     def _warm_operand(self, x0, batched: bool, dtype):
         """Normalize an ``x0`` warm start to the internal batched-k shape
         ((n, k) even for a single RHS — matching ``block_rhs``)."""
@@ -472,9 +576,10 @@ class MatrixFreePreparedSolver:
         tol: float | None,
         warm_kind: str | None = None,
         block_history: bool = False,
+        per_block: bool = False,
     ):
         key = (num_epochs, inner_iters, has_ref, tol, warm_kind,
-               block_history)
+               block_history, per_block)
         run = self._jit_cache.get(key)
         if run is None:
 
@@ -508,6 +613,7 @@ class MatrixFreePreparedSolver:
         tol: float | None = None,
         x0: np.ndarray | tuple | None = None,
         block_history: bool = False,
+        dynamics: str | None = None,
     ) -> SolveResult:
         """Consensus solve against the cached sparse operator.
 
@@ -535,18 +641,25 @@ class MatrixFreePreparedSolver:
         (per-epoch per-block residuals off the carried probe — no extra
         tile pass; see ``repro.obs.convergence`` for the diagnostics
         built on it). The default leaves the compiled program untouched.
+
+        ``dynamics`` overrides the prepared default per call: ``"global"``
+        runs the scalar (γ, η) program (bit-identical to a global-prepared
+        solver), ``"per_block"`` scales them by the prepared per-block
+        spectral weights (requires ``prepare(..., dynamics="per_block")``).
         """
         if isinstance(num_epochs, SolveOptions):
             return self.solve(b, **num_epochs.kwargs())
         gamma = self.gamma if gamma is None else gamma
         eta = self.eta if eta is None else eta
         inner_iters = self.inner_iters if inner_iters is None else inner_iters
+        per_block = self._resolve_dynamics(dynamics)
         b = np.asarray(b)
         batched = b.ndim == 2
-        bvecs = self.op.block_rhs(b)  # (J, p_pad, k) — k=1 for a single RHS
+        bvecs = self.block_rhs(b)  # (J, p_pad, k) — k=1 for a single RHS
         dtype = self.op.fwd_data.dtype
         ref = None if x_ref is None else jnp.asarray(x_ref, dtype)
         warm = self._warm_operand(x0, batched, dtype)
+        gamma_op, eta_op = self._dynamics_operands(gamma, eta, dtype, per_block)
 
         t0 = time.perf_counter()
         run = self._solve_program(
@@ -556,10 +669,11 @@ class MatrixFreePreparedSolver:
                 "masked" if isinstance(warm, tuple) else "x0"
             ),
             block_history=bool(block_history),
+            per_block=per_block,
         )
         x, hist = run(
             self.op, self.diag_inv, self.gram_inv, bvecs,
-            jnp.asarray(gamma, dtype), jnp.asarray(eta, dtype), ref, warm,
+            gamma_op, eta_op, ref, warm,
         )
         x = jax.block_until_ready(x)
         wall = time.perf_counter() - t0
@@ -605,6 +719,7 @@ class MatrixFreePreparedSolver:
         arrays["diag_inv"] = np.asarray(self.diag_inv)
         if self.gram_inv is not None:
             arrays["gram_inv"] = np.asarray(self.gram_inv)
+        arrays.update(_dynamics_arrays(self))
         meta = {
             "path": "matfree",
             "method": self.method,
@@ -617,6 +732,7 @@ class MatrixFreePreparedSolver:
             "gram_solver": self.gram_solver,
             "warm_start": bool(self.warm_start),
             "op": op_meta,
+            **_dynamics_meta(self),
         }
         return arrays, meta
 
@@ -640,6 +756,7 @@ class MatrixFreePreparedSolver:
                 else None
             ),
             warm_start=meta["warm_start"],
+            **_dynamics_state(arrays, meta),
         )
 
 
@@ -659,6 +776,9 @@ def prepare_matfree(
     warm_start: bool = False,
     mesh=None,
     block_axes: tuple[str, ...] = ("data",),
+    partition: str = "uniform",
+    dynamics: str = "global",
+    plan=None,
 ) -> MatrixFreePreparedSolver:
     """Matfree setup: COO -> partitioned blocked-ELL + inner Gram solver.
 
@@ -678,6 +798,15 @@ def prepare_matfree(
     ``block_axes`` and returns a ``ShardedMatrixFreeSolver`` (same solve
     contract, shard_map execution — see ``repro.core.matfree_sharded``);
     ``num_blocks`` must divide evenly over the block-axis devices.
+
+    ``partition="cost_aware"`` assigns rows to blocks via
+    ``PartitionPlan.cost_aware`` (nnz-balanced, spectrally grouped — see
+    ``repro.core.partition``) instead of the uniform contiguous split;
+    ``dynamics="per_block"`` estimates per-block Gram spectra
+    (``repro.core.spectra``) at prepare time and defaults ``solve`` to the
+    per-block (γ_j, η_j) consensus. Both default off and leave the
+    historical path bit-identical. ``plan`` injects a prebuilt plan
+    (overrides ``partition``).
     """
     if method not in MATFREE_METHODS:
         raise ValueError(
@@ -686,18 +815,41 @@ def prepare_matfree(
         )
     if gram_solver not in GRAM_SOLVERS:
         raise ValueError(f"gram_solver must be one of {GRAM_SOLVERS}")
+    if partition not in ("uniform", "cost_aware"):
+        raise ValueError(
+            f"partition must be 'uniform'|'cost_aware', got {partition!r}"
+        )
+    if dynamics not in ("global", "per_block"):
+        raise ValueError(
+            f"dynamics must be 'global'|'per_block', got {dynamics!r}"
+        )
     t0 = time.perf_counter()
     coo = A if isinstance(A, COOMatrix) else COOMatrix.from_dense(np.asarray(A))
     dtype = np.dtype(dtype or np.float32)
+    if plan is None and partition == "cost_aware":
+        from repro.core.partition import PartitionPlan
+
+        plan = PartitionPlan.cost_aware(coo, num_blocks)
+    elif plan is not None:
+        partition = "uniform" if plan.kind == "uniform" else "cost_aware"
+    if plan is not None and plan.kind == "uniform":
+        plan = None  # uniform plans take the historical path exactly
     op = PartitionedBSR.from_coo(
         coo, num_blocks, block_shape, dtype,
         with_transpose=use_kernels,  # only the Pallas path streams A_jᵀ tiles
         with_gram=True,  # the inner-solve operator (near-diagonal, few % extra)
         balance=balance,
+        plan=plan,
     )
     # relative-epsilon Jacobi clamp: padded rows stay 0, near-zero Gram
     # diagonals are bounded instead of exploding (see jacobi_weights)
     diag_inv = op.jacobi_weights()
+    block_gamma_w = block_eta_w = spectra = None
+    if dynamics == "per_block":
+        from repro.core import spectra as spectra_mod
+
+        spectra = spectra_mod.block_spectra_matfree(op)
+        block_gamma_w, block_eta_w = spectra_mod.derive_dynamics(spectra)
     if gram_solver == "auto":
         inv_bytes = num_blocks * op.p_pad * op.p_pad * dtype.itemsize
         gram_solver = "direct" if inv_bytes <= DIRECT_GRAM_BYTES else "pcg"
@@ -743,5 +895,11 @@ def prepare_matfree(
         gram_solver=gram_solver,
         gram_inv=gram_inv,
         warm_start=warm_start,
+        partition=partition,
+        dynamics=dynamics,
+        plan=plan,
+        block_gamma_weights=block_gamma_w,
+        block_eta_weights=block_eta_w,
+        block_spectra=spectra,
         **placement_kw,
     )

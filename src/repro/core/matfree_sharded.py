@@ -108,9 +108,10 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
         tol: float | None,
         warm_kind: str | None = None,
         block_history: bool = False,
+        per_block: bool = False,
     ):
         key = (num_epochs, inner_iters, has_ref, tol, warm_kind,
-               block_history)
+               block_history, per_block)
         run = self._jit_cache.get(key)
         if run is None:
             axes, red = self._axes()
@@ -120,13 +121,17 @@ class ShardedMatrixFreeSolver(MatrixFreePreparedSolver):
             # solution — every shard projects it onto its own blocks; the
             # masked serving pair replicates both halves
             warm_spec = (P(), P()) if warm_kind == "masked" else P()
+            # per-block dynamics: γ is a (J,) vector sharded like the
+            # blocks (each shard reads only its own γ_j slice) and η the
+            # pair (η_vec (J,) sharded, η̄ replicated scalar) — the
+            # weighted eq. 7 runs on local slices, no new collectives
             in_specs = (
                 self.op.shard_spec(axes),  # operator pytree, block-sharded
                 sharded,  # diag_inv (J, p_pad, 1)
                 sharded if self.gram_inv is not None else P(),  # gram_inv
                 sharded,  # bvecs (J, p_pad, k)
-                P(),  # gamma
-                P(),  # eta
+                sharded if per_block else P(),  # gamma
+                (sharded, P()) if per_block else P(),  # eta
                 P(),  # ref (replicated) or None
                 warm_spec,  # x0 (replicated) or None
             )

@@ -27,7 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import apc, cg, consensus, dapc, dgd, projections
-from repro.core.partition import BlockMode, Partition, block_rhs, partition_matrix
+from repro.core.partition import (
+    BlockMode,
+    Partition,
+    PartitionPlan,
+    block_rhs,
+    partition_matrix,
+)
 from repro.sparse.matrix import COOMatrix
 
 METHODS = ("apc", "dapc", "dgd", "cgnr")
@@ -73,6 +79,8 @@ class PrepareConfig:
     warm_start: bool = False
     mesh: Any = None
     block_axes: tuple[str, ...] = ("data",)
+    partition: str = "uniform"  # "uniform" | "cost_aware" row->block plan
+    dynamics: str = "global"  # "global" | "per_block" (γ_j, η_j) dynamics
 
     def kwargs(self) -> dict:
         """The equivalent ``prepare(A, **kwargs)`` keyword dict."""
@@ -114,6 +122,7 @@ class SolveOptions:
     inner_iters: int | None = None  # matfree paths only
     block_history: bool | None = None  # per-block residual diagnostics
     # (consensus methods; see repro.obs.convergence)
+    dynamics: str | None = None  # "global" | "per_block" override (consensus)
     method_kwargs: dict = dataclasses.field(default_factory=dict)
 
     def kwargs(self) -> dict:
@@ -316,6 +325,15 @@ class PreparedSolver:
     factors: tuple  # method-specific cached setup (see prepare())
     projector: tuple  # ("dense"|"implicit"|"kernels", operand array) or ()
     setup_seconds: float
+    # heterogeneity-aware partitioning + per-block dynamics (see
+    # repro.core.partition / repro.core.spectra); all off by default —
+    # the default solver is bit-identical to the historical one
+    partition: str = "uniform"
+    dynamics: str = "global"
+    plan: Any = dataclasses.field(default=None, repr=False)  # PartitionPlan
+    block_gamma_weights: Any = dataclasses.field(default=None, repr=False)
+    block_eta_weights: Any = dataclasses.field(default=None, repr=False)
+    block_spectra: Any = dataclasses.field(default=None, repr=False)
     num_solves: int = 0
     # consensus programs jitted per (epochs, options) — repeat solves of the
     # same request shape hit the XLA executable cache directly
@@ -346,6 +364,38 @@ class PreparedSolver:
                 seen.add(id(a))
                 total += int(a.nbytes)
         return total
+
+    def _resolve_dynamics(self, dynamics: str | None) -> bool:
+        """Resolve a solve-time ``dynamics`` override against the prepared
+        state; returns True when the solve runs per-block (γ_j, η_j)."""
+        mode = self.dynamics if dynamics is None else dynamics
+        if mode not in ("global", "per_block"):
+            raise ValueError(
+                f"dynamics must be 'global' or 'per_block', got {mode!r}"
+            )
+        if mode == "global":
+            return False
+        if self.method not in ("apc", "dapc"):
+            raise ValueError(
+                "dynamics='per_block' needs a consensus method (apc/dapc); "
+                f"this solver runs {self.method!r}"
+            )
+        if self.block_eta_weights is None:
+            raise ValueError(
+                "dynamics='per_block' needs per-block spectra — prepare "
+                "with dynamics='per_block' to estimate them"
+            )
+        return True
+
+    def _dynamics_operands(self, gamma, eta, per_block: bool):
+        """(γ, η) device operands: scalars, or mean-preserving per-block
+        vectors scaled by the prepared spectral weights."""
+        if not per_block:
+            return jnp.asarray(gamma), jnp.asarray(eta)
+        dt = self.blocks.dtype
+        gv = np.asarray(self.block_gamma_weights, np.float64) * float(gamma)
+        ev = np.asarray(self.block_eta_weights, np.float64) * float(eta)
+        return jnp.asarray(gv, dt), jnp.asarray(ev, dt)
 
     def _consensus_program(self, num_epochs: int, kwargs: dict):
         """Jitted substitution + consensus for the apc/dapc methods.
@@ -423,6 +473,7 @@ class PreparedSolver:
         eta: float | None = None,
         x_ref: np.ndarray | None = None,
         x0: np.ndarray | tuple | None = None,
+        dynamics: str | None = None,
         **kwargs,
     ) -> SolveResult:
         """Solve A x = b against the cached factors (Algorithm 1 steps 5–8
@@ -448,6 +499,13 @@ class PreparedSolver:
         in-scan (``repro.core.consensus``) while the batch keeps one
         compiled shape — matching the matfree path's ``solve(tol=...)``.
 
+        ``dynamics`` overrides the prepared default per solve:
+        ``"per_block"`` runs eqs. (6)-(7) with the spectral per-block
+        (γ_j, η_j) vectors estimated at prepare time (requires
+        ``prepare(..., dynamics="per_block")``), ``"global"`` forces the
+        scalar pair. The per-block weights are mean-1, so γ/η keep their
+        global meaning (see ``repro.core.spectra``).
+
         ``num_epochs`` may be a ``SolveOptions`` — ``solve(b,
         SolveOptions(...))`` is the typed equivalent of the keyword form
         (the dataclass is the single source of truth for this signature).
@@ -456,6 +514,7 @@ class PreparedSolver:
             return self.solve(b, **num_epochs.kwargs())
         gamma = self.gamma if gamma is None else gamma
         eta = self.eta if eta is None else eta
+        per_block = self._resolve_dynamics(dynamics)
         b = np.asarray(b)
         batched = b.ndim == 2
         bvecs = block_rhs(self.mixer, b, np.dtype(self.blocks.dtype))
@@ -470,9 +529,10 @@ class PreparedSolver:
         if self.method in ("apc", "dapc"):
             xbar0 = kwargs.pop("xbar0", None)
             run = self._consensus_program(num_epochs, kwargs)
+            gamma_op, eta_op = self._dynamics_operands(gamma, eta, per_block)
             x, hist = run(
                 self.blocks, self.factors, self.projector[1], bvecs,
-                jnp.asarray(gamma), jnp.asarray(eta), ref, xbar0,
+                gamma_op, eta_op, ref, xbar0,
                 _as_warm_operand(x0, self.blocks.dtype),
             )
         elif self.method == "cgnr":
@@ -542,6 +602,18 @@ class PreparedSolver:
                 projector_meta = {"kind": kind, "factor": ref}
         if self.mixer.g is not None:
             arrays["mixer_g"] = np.asarray(self.mixer.g)
+        mixer_meta = {
+            "m": int(self.mixer.m),
+            "num_blocks": int(self.mixer.num_blocks),
+            "p": int(self.mixer.p),
+            "kind": "uniform",
+        }
+        if hasattr(self.mixer, "gather"):  # PlanMixer (cost-aware plan)
+            mixer_meta["kind"] = "plan"
+            arrays["mixer_gather"] = np.asarray(self.mixer.gather)
+        from repro.core import spectra as _spectra
+
+        arrays.update(_spectra.dynamics_arrays(self))
         meta = {
             "path": "dense",
             "method": self.method,
@@ -551,13 +623,10 @@ class PreparedSolver:
             "materialize_p": bool(self.materialize_p),
             "use_kernels": bool(self.use_kernels),
             "setup_seconds": float(self.setup_seconds),
-            "mixer": {
-                "m": int(self.mixer.m),
-                "num_blocks": int(self.mixer.num_blocks),
-                "p": int(self.mixer.p),
-            },
+            "mixer": mixer_meta,
             "factors": factors_meta,
             "projector": projector_meta,
+            **_spectra.dynamics_meta(self),
         }
         return arrays, meta
 
@@ -569,7 +638,8 @@ class PreparedSolver:
         same factor bytes, so ``solve`` results are bit-identical — with a
         fresh jit cache and a zeroed ``num_solves``.
         """
-        from repro.sparse.matrix import RowMixer
+        from repro.core import spectra as _spectra
+        from repro.sparse.matrix import PlanMixer, RowMixer
 
         factors = tuple(
             jnp.asarray(arrays[spec["key"]])
@@ -585,10 +655,18 @@ class PreparedSolver:
             )
             projector = (spec["kind"], operand)
         mx = meta["mixer"]
-        mixer = RowMixer(
-            m=int(mx["m"]), num_blocks=int(mx["num_blocks"]), p=int(mx["p"]),
-            g=np.asarray(arrays["mixer_g"]) if "mixer_g" in arrays else None,
-        )
+        g = np.asarray(arrays["mixer_g"]) if "mixer_g" in arrays else None
+        if mx.get("kind", "uniform") == "plan":
+            mixer: Any = PlanMixer(
+                m=int(mx["m"]), num_blocks=int(mx["num_blocks"]),
+                p=int(mx["p"]), gather=np.asarray(arrays["mixer_gather"]),
+                g=g,
+            )
+        else:
+            mixer = RowMixer(
+                m=int(mx["m"]), num_blocks=int(mx["num_blocks"]),
+                p=int(mx["p"]), g=g,
+            )
         return cls(
             blocks=jnp.asarray(arrays["blocks"]),
             mode=meta["mode"],
@@ -601,6 +679,7 @@ class PreparedSolver:
             factors=factors,
             projector=projector,
             setup_seconds=meta["setup_seconds"],
+            **_spectra.dynamics_state(arrays, meta),
         )
 
 
@@ -623,6 +702,8 @@ def prepare(
     warm_start: bool = False,
     mesh=None,
     block_axes: tuple[str, ...] = ("data",),
+    partition: str = "uniform",
+    dynamics: str = "global",
 ):  # -> PreparedSolver | repro.core.matfree.MatrixFreePreparedSolver
     """Algorithm 1 steps 1–4, b-independent: partition A, factorize every
     block, build the jitted projector. Returns the reusable PreparedSolver.
@@ -646,6 +727,14 @@ def prepare(
     solve program runs under ``shard_map`` — sparse systems larger than
     one device, same solve contract (repro.core.matfree_sharded).
 
+    ``partition="cost_aware"`` replaces the uniform contiguous row split
+    with a heterogeneity-aware ``PartitionPlan`` (balanced nnz load +
+    spectral grouping, ``repro.core.partition``); ``dynamics="per_block"``
+    (consensus methods only) estimates per-block spectral bounds during
+    prepare and runs eqs. (6)-(7) with per-block (γ_j, η_j) — see
+    ``repro.core.spectra``. Both default off and the defaults are
+    bit-identical to the historical solver.
+
     Cached per method (dense path):
       * dapc — (W_j, R_j) reduced-QR factors (paper eqs. 1/4);
       * apc  — (A_j⁺, P_j) pseudoinverse + dense projector (the classical
@@ -658,6 +747,23 @@ def prepare(
         return prepare(A, **method.kwargs())
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
+    if partition not in ("uniform", "cost_aware"):
+        raise ValueError(
+            f"partition must be 'uniform' or 'cost_aware', got {partition!r}"
+        )
+    if dynamics not in ("global", "per_block"):
+        raise ValueError(
+            f"dynamics must be 'global' or 'per_block', got {dynamics!r}"
+        )
+    if dynamics == "per_block" and method not in ("apc", "dapc"):
+        raise ValueError(
+            "dynamics='per_block' needs a consensus method (apc/dapc); "
+            f"got method={method!r}"
+        )
+    plan = (
+        PartitionPlan.cost_aware(A, num_blocks)
+        if partition == "cost_aware" else None
+    )
     path = resolve_path(A, num_blocks, mode, matfree_threshold_bytes)
     if path == "matfree" and method not in ("apc", "dapc"):
         if mode == "auto":
@@ -684,13 +790,16 @@ def prepare(
             gamma=gamma, eta=eta, inner_iters=inner_iters,
             inner_tol=inner_tol, use_kernels=use_kernels, balance=balance,
             gram_solver=gram_solver, warm_start=warm_start,
-            mesh=mesh, block_axes=block_axes, **kw,
+            mesh=mesh, block_axes=block_axes,
+            partition=partition, dynamics=dynamics, plan=plan, **kw,
         )
     if isinstance(A, COOMatrix):
         A = A.to_dense()  # the dense path's per-block decompress, up front
     block_mode: BlockMode = mode if mode in ("tall", "wide") else "auto"
     t0 = time.perf_counter()
-    blocks, resolved, mixer = partition_matrix(A, num_blocks, block_mode, dtype)
+    blocks, resolved, mixer = partition_matrix(
+        A, num_blocks, block_mode, dtype, plan=plan
+    )
 
     factors: tuple = ()
     projector: tuple = ()
@@ -711,6 +820,14 @@ def prepare(
         projector = ("dense", Ps)
     elif method == "dgd":
         factors = (float(dgd.estimate_lipschitz(blocks)) ** -1,)
+    block_gamma_w = block_eta_w = spectra_d = None
+    if dynamics == "per_block":
+        from repro.core import spectra as spectra_mod
+
+        spectra_d = spectra_mod.block_spectra_dense(
+            np.asarray(blocks), plan=plan
+        )
+        block_gamma_w, block_eta_w = spectra_mod.derive_dynamics(spectra_d)
     jax.block_until_ready(blocks if not factors else factors[0])
     setup_seconds = time.perf_counter() - t0
 
@@ -726,4 +843,10 @@ def prepare(
         factors=factors,
         projector=projector,
         setup_seconds=setup_seconds,
+        partition=partition,
+        dynamics=dynamics,
+        plan=plan,
+        block_gamma_weights=block_gamma_w,
+        block_eta_weights=block_eta_w,
+        block_spectra=spectra_d,
     )

@@ -14,6 +14,7 @@ import dataclasses
 from repro.core.prepared import (  # noqa: F401  (re-exported API)
     METHODS,
     ColumnResult,
+    PartitionPlan,
     PrepareConfig,
     PreparedSolver,
     SolveOptions,

@@ -52,7 +52,7 @@ def block_residual_history(result) -> np.ndarray:
     return trace[..., None] if trace.ndim == 2 else trace
 
 
-def per_block_rates(result, eps: float = 1e-30) -> np.ndarray:
+def per_block_rates(result, eps: float = 1e-30, plan=None):
     """Per-block geometric decay rate estimates, shape ``(J, k)``.
 
     Fits ``r_j(t) ≈ r_j(0)·ρ_j^t`` on the residual NORM (the history
@@ -63,6 +63,11 @@ def per_block_rates(result, eps: float = 1e-30) -> np.ndarray:
     heterogeneity signature. Frozen/converged columns (tol early exit)
     repeat their final residual, which only flattens the estimate toward
     its true converged value, never inflates it.
+
+    With a ``PartitionPlan`` (the solver's ``prep.plan``) the return is
+    ``{"rates", "labels"}``: ``labels[j]`` maps block ``j`` back to its
+    ORIGINAL row ranges (``plan.describe_block``), so a cost-aware plan's
+    scattered blocks stay attributable to the input rows that formed them.
     """
     trace = block_residual_history(result)
     E = trace.shape[0]
@@ -70,10 +75,16 @@ def per_block_rates(result, eps: float = 1e-30) -> np.ndarray:
         raise ValueError(f"need >= 2 epochs to fit a rate, got {E}")
     first = np.maximum(trace[0], eps)
     last = np.maximum(trace[-1], eps)
-    return (last / first) ** (1.0 / (2.0 * (E - 1)))
+    rates = (last / first) ** (1.0 / (2.0 * (E - 1)))
+    if plan is None:
+        return rates
+    return {
+        "rates": rates,
+        "labels": [plan.describe_block(j) for j in range(trace.shape[1])],
+    }
 
 
-def convergence_report(result, tol: float | None = None) -> dict:
+def convergence_report(result, tol: float | None = None, plan=None) -> dict:
     """Summarize a per-block trace: who is dragging, and by how much.
 
     Returns (arrays are per-column where applicable):
@@ -84,7 +95,10 @@ def convergence_report(result, tol: float | None = None) -> dict:
         = perfectly balanced decay, the uniform-partition ideal);
       * ``block_epochs_to_tol`` — ``(J, k)`` epochs until each BLOCK's
         residual_sq reached ``tol²/J`` (its fair share of a global
-        tolerance), ``num_epochs`` when it never did — only with ``tol``.
+        tolerance), ``num_epochs`` when it never did — only with ``tol``;
+      * ``block_labels`` — with a ``PartitionPlan``, each block's original
+        row ranges (``plan.describe_block``) so the report reads in input
+        coordinates even for scattered cost-aware blocks.
     """
     trace = block_residual_history(result)
     E, J, _ = trace.shape
@@ -100,6 +114,8 @@ def convergence_report(result, tol: float | None = None) -> dict:
         / np.maximum(np.min(final, axis=0), 1e-30),
         "final_block_residual_sq": final,
     }
+    if plan is not None:
+        out["block_labels"] = [plan.describe_block(j) for j in range(J)]
     if tol is not None:
         share = float(tol) ** 2 / J
         reached = trace <= share
@@ -168,21 +184,31 @@ def audit_epoch_collectives(
     ``prep`` is a ``ShardedMatrixFreeSolver`` (the single-host paths have
     no collectives to audit — they trivially pass any budget). ``b`` is the
     right-hand side to shape the traced program with — or pass already
-    block-partitioned (possibly mesh-placed) ``bvecs`` directly.
+    block-partitioned (possibly mesh-placed) ``bvecs`` directly. A solver
+    prepared with ``dynamics="per_block"`` is audited with the per-block
+    (γ_j, η_j) operands ARMED — the budget claim covers the adaptive
+    program, not just the scalar one.
     """
     import jax
-    import jax.numpy as jnp
 
     if bvecs is None:
-        bvecs = prep.op.block_rhs(np.asarray(b))
+        rhs_fn = getattr(prep, "block_rhs", None) or prep.op.block_rhs
+        bvecs = rhs_fn(np.asarray(b))
     dtype = prep.op.fwd_data.dtype
+    per_block = (
+        getattr(prep, "dynamics", "global") == "per_block"
+        and getattr(prep, "block_eta_weights", None) is not None
+    )
     run = prep._solve_program(
         num_epochs, prep.inner_iters, False, tol,
-        block_history=block_history,
+        block_history=block_history, per_block=per_block,
+    )
+    gamma_op, eta_op = prep._dynamics_operands(
+        prep.gamma, prep.eta, dtype, per_block
     )
     closed = jax.make_jaxpr(run)(
         prep.op, prep.diag_inv, prep.gram_inv, bvecs,
-        jnp.asarray(prep.gamma, dtype), jnp.asarray(prep.eta, dtype), None,
+        gamma_op, eta_op, None,
         None,  # x0: audit the cold program
     )
     found = collect_reduces(closed.jaxpr)

@@ -47,7 +47,11 @@ import tempfile
 
 import numpy as np
 
-FORMAT_VERSION = 1
+# v2: solver states may carry a PartitionPlan (plan_assignment /
+# mixer_gather arrays, plan meta) and per-block dynamics state (spectral
+# weights + spectra). v1 checkpoints miss cleanly on the version check and
+# re-prepare — no migration path needed, the store is a cache.
+FORMAT_VERSION = 2
 
 # prepare kwargs that do not change the PREPARED STATE's values, only its
 # placement/runtime — excluded from the compatibility digest

@@ -644,6 +644,12 @@ class SolveServer:
             "server_solve_ewma_seconds",
             "EWMA batch solve time (the policy's deadline estimate)",
         )
+        self._g_imbalance = m.gauge(
+            "server_block_imbalance",
+            "slowest/fastest final per-block residual of the last solve "
+            "that recorded block_history (heterogeneity signal; 1.0 = "
+            "balanced decay)",
+        )
         self._c_failures = m.counter(
             "server_failures_total", "solve failures observed, by reason"
         )
@@ -739,6 +745,9 @@ class SolveServer:
         pool = self.pool.stats
         out.update(dataclasses.asdict(pool))
         out["misses"] = pool.prepares + pool.restores
+        out["block_imbalance"] = float(
+            self.metrics.value("server_block_imbalance")
+        )
         return out
 
     def reset_stats(self) -> None:
@@ -1179,6 +1188,16 @@ class SolveServer:
 
         result = await loop.run_in_executor(self._executor, run)
         t_done = self.clock.now()
+        trace = result.history.get("block_residual_sq")
+        if trace is not None:
+            # heterogeneity gauge: how unevenly the blocks finished — the
+            # partitioner-facing signal behind repro.obs.convergence
+            final = np.asarray(trace[-1])  # (J,) or (J, k)
+            if final.ndim > 1:
+                final = final.sum(axis=-1)
+            self._g_imbalance.set(
+                float(final.max() / max(float(final.min()), 1e-30))
+            )
         columns = result.per_column(tol=tol)
         return result, columns, tol, t_dispatch, t_done
 

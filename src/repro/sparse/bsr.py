@@ -444,6 +444,7 @@ class PartitionedBSR:
     gram_data: jnp.ndarray | None = None  # (J, Rp, Sg, bp, bp)
     ext_pos: jnp.ndarray | None = None  # (J, p_pad) int32: internal -> external
     int_pos: jnp.ndarray | None = None  # (J, p_pad) int32: external -> internal
+    planned: bool = False  # built from a non-uniform PartitionPlan
 
     @property
     def num_blocks(self) -> int:
@@ -483,6 +484,7 @@ class PartitionedBSR:
         with_transpose: bool = False,
         with_gram: bool = False,
         balance: bool = False,
+        plan=None,
     ) -> "PartitionedBSR":
         """Partition + convert, entirely without densifying.
 
@@ -494,11 +496,26 @@ class PartitionedBSR:
         the tiles in a per-block load-balanced row order (the ELL slot
         count ``S`` is a max over block-rows; see ``_balance_perm``) while
         keeping every public product in the original row order.
+
+        ``plan`` (a ``repro.core.partition.PartitionPlan``) overrides the
+        uniform contiguous row→block map: block heights become the plan's
+        max count and ragged blocks absorb the slack as zero padding rows
+        (exactly the existing remainder convention, so everything
+        downstream — balance permutation, Gram shards, mesh placement —
+        is untouched). A planned operator's ``block_rhs`` is plan-order;
+        use the owning solver's plan-aware ``block_rhs`` for original-order
+        right-hand sides.
         """
         m, n = coo.shape
         bp, bn = block_shape
         J = num_blocks
-        p = _ceil_div(m, J)
+        use_plan = plan is not None and plan.kind != "uniform"
+        if use_plan and (plan.m != m or plan.num_blocks != J):
+            raise ValueError(
+                f"plan is for (m={plan.m}, J={plan.num_blocks}), "
+                f"got (m={m}, J={J})"
+            )
+        p = plan.max_rows if use_plan else _ceil_div(m, J)
         p_pad = _ceil_div(p, bp) * bp
         dtype = np.dtype(dtype)
 
@@ -517,8 +534,12 @@ class PartitionedBSR:
             sel = order[keep]
             rows, cols, vals = rows[sel], cols[sel], vals[sel]
         coo = COOMatrix(rows, cols, vals, (m, n))
-        blk = rows // p
-        local = rows % p
+        if use_plan:
+            blk = plan.assignment.astype(np.int64)[rows]
+            local = plan.slots[rows]
+        else:
+            blk = rows // p
+            local = rows % p
 
         ext_pos = int_pos = None
         tile_local = local  # internal (tile-layout) row of every entry
@@ -585,7 +606,7 @@ class PartitionedBSR:
             fwd_idx, fwd_data, (m, n), p, p_pad,
             tra_indices=tra_idx, tra_data=tra_data,
             gram_indices=gram_idx, gram_data=gram_data,
-            ext_pos=ext_pos, int_pos=int_pos,
+            ext_pos=ext_pos, int_pos=int_pos, planned=use_plan,
         )
 
     # -- mesh placement ------------------------------------------------------
@@ -786,7 +807,9 @@ class PartitionedBSR:
         meta: dict = {}
         for f in dataclasses.fields(self):
             value = getattr(self, f.name)
-            if f.name in ("shape", "p", "p_pad"):
+            if f.name == "planned":
+                meta[f.name] = bool(value)
+            elif f.name in ("shape", "p", "p_pad"):
                 meta[f.name] = list(value) if f.name == "shape" else int(value)
             elif value is not None:
                 arrays[prefix + f.name] = np.asarray(value)
@@ -803,11 +826,19 @@ class PartitionedBSR:
         }
         return cls(
             shape=tuple(meta["shape"]), p=int(meta["p"]),
-            p_pad=int(meta["p_pad"]), **kwargs,
+            p_pad=int(meta["p_pad"]),
+            planned=bool(meta.get("planned", False)), **kwargs,
         )
 
     def block_rhs(self, b: np.ndarray) -> jnp.ndarray:
         """RHS (m,) or (m, k) -> (J, p_pad, k), zero-padded like the rows."""
+        if self.planned:
+            # the uniform rows//p scatter below would misplace entries; the
+            # owning solver holds the plan and does the plan-aware scatter
+            raise ValueError(
+                "operator was built from a non-uniform PartitionPlan; use "
+                "the prepared solver's block_rhs (it owns the plan)"
+            )
         b = np.asarray(b)
         squeeze = b.ndim == 1
         if squeeze:
@@ -828,11 +859,11 @@ def _bsr_flatten(op: PartitionedBSR):
         op.fwd_indices, op.fwd_data, op.tra_indices, op.tra_data,
         op.gram_indices, op.gram_data, op.ext_pos, op.int_pos,
     )
-    return children, (op.shape, op.p, op.p_pad)
+    return children, (op.shape, op.p, op.p_pad, op.planned)
 
 
 def _bsr_unflatten(aux, children):
-    shape, p, p_pad = aux
+    shape, p, p_pad, planned = aux
     (
         fwd_idx, fwd_data, tra_idx, tra_data, gram_idx, gram_data,
         ext_pos, int_pos,
@@ -841,7 +872,7 @@ def _bsr_unflatten(aux, children):
         fwd_idx, fwd_data, shape=shape, p=p, p_pad=p_pad,
         tra_indices=tra_idx, tra_data=tra_data,
         gram_indices=gram_idx, gram_data=gram_data,
-        ext_pos=ext_pos, int_pos=int_pos,
+        ext_pos=ext_pos, int_pos=int_pos, planned=planned,
     )
 
 

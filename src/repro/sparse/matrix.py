@@ -110,6 +110,57 @@ def make_row_mixer(m: int, num_blocks: int) -> RowMixer:
     return RowMixer(m=m, num_blocks=num_blocks, p=p, g=g)
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanMixer:
+    """Plan-aware sibling of ``RowMixer`` for ragged ``PartitionPlan``s.
+
+    Every block is padded up to the plan's max row count with consistent
+    mixing equations (random combinations of ALL original rows, the paper's
+    eq. 8 augmentation — the same trick ``RowMixer`` uses for the remainder
+    rows), so dense block shapes stay static and per-block QR never sees a
+    rank-deficient zero row. ``gather`` scatters [original rows ; mixing
+    rows] into the (J, p, ...) block layout.
+    """
+
+    m: int  # original row count
+    num_blocks: int
+    p: int  # padded block height (plan max_rows)
+    gather: np.ndarray  # (J*p,) indices into [rows ; mixing rows]
+    g: np.ndarray | None  # (pad, m) mixing rows; None when the plan is even
+
+    def apply(self, v: np.ndarray) -> np.ndarray:
+        """Permute + pad rows of ``v`` (m, ...) into blocks (J, p, ...)."""
+        v = np.asarray(v)
+        if v.shape[0] != self.m:
+            raise ValueError(f"expected {self.m} rows, got {v.shape[0]}")
+        if self.g is not None:
+            v = np.concatenate([v, self.g.astype(v.dtype) @ v], axis=0)
+        return v[self.gather].reshape(self.num_blocks, self.p, *v.shape[1:])
+
+
+def make_plan_mixer(plan) -> PlanMixer:
+    """Mixer realizing a ``repro.core.partition.PartitionPlan`` (seeded:
+    identical every call for the same plan)."""
+    m, num_blocks = plan.m, plan.num_blocks
+    p = plan.max_rows
+    pad = p * num_blocks - m
+    g = None
+    if pad:
+        rng = np.random.default_rng(0)
+        g = rng.standard_normal((pad, m)) / np.sqrt(m)
+    gather = np.empty(num_blocks * p, np.int64)
+    # real rows at their plan slots, mixing rows filling each block's tail
+    gather[plan.flat_slots(p)] = np.arange(m)
+    pad_next = m
+    counts = plan.counts
+    for j in range(num_blocks):
+        lo = j * p + int(counts[j])
+        hi = (j + 1) * p
+        gather[lo:hi] = np.arange(pad_next, pad_next + (hi - lo))
+        pad_next += hi - lo
+    return PlanMixer(m=m, num_blocks=num_blocks, p=p, gather=gather, g=g)
+
+
 def block_rows(a: COOMatrix | np.ndarray, b: np.ndarray, num_blocks: int):
     """Uniform row partition into ``num_blocks`` dense blocks (J, p, n) + (J, p).
 

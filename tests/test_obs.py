@@ -326,6 +326,8 @@ STATS_SCHEMA = {
     # fault-containment counters (ISSUE 9)
     "failures", "retries", "recovered_requests", "failed_requests",
     "cancelled",
+    # heterogeneity gauge (ISSUE 10)
+    "block_imbalance",
 }
 
 
